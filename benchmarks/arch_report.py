@@ -1,0 +1,103 @@
+"""Beyond-paper: RAPID edge-cloud economics for EVERY zoo architecture.
+
+The paper evaluates one backbone (OpenVLA-7B on an A100).  This report asks
+the question a deployment team actually faces: *given RAPID's trigger and a
+TPU v5e cloud, which of the 10 assigned architectures can serve a 20 Hz
+robot, and at what edge footprint?*
+
+Per architecture:
+  cloud-side time  = decode_32k roofline (max of compute/memory terms from
+                     the dry-run baseline table) × chunk_len tokens
+                     + channel latency,
+  edge-side time   = RAPID's resident split (same fraction as the paper's
+                     2.4/14.2 GB partition) through the calibrated edge rate,
+  offload fraction = the simulated RAPID trigger (architecture-independent —
+                     that is the point of a kinematic trigger).
+
+Feasibility: an action chunk must arrive before the previous one drains
+(chunk_len / f_control = 8/20 Hz = 400 ms budget).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_IDS, get_config
+from repro.runtime.channel import ChannelConfig, query_latency_ms
+from repro.runtime.latency import HardwareModel
+
+RESULTS = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+CHUNK_LEN = 8
+F_CONTROL = 20.0
+BUDGET_MS = CHUNK_LEN / F_CONTROL * 1e3
+EDGE_SPLIT_FRACTION = 2.4 / 14.2  # the paper's RAPID partition
+
+
+def arch_serving_rows(offload_fraction: float = 0.31):
+    if not os.path.exists(RESULTS):
+        return []
+    res = json.load(open(RESULTS))
+    hw = HardwareModel.calibrated(chunk_len=CHUNK_LEN)
+    net = query_latency_ms(ChannelConfig(), CHUNK_LEN)
+    rows = []
+    for arch in ARCH_IDS:
+        if arch == "openvla-7b":
+            continue
+        key = f"{arch}|decode_32k|pod16x16"
+        if key not in res or res[key].get("status") != "ok":
+            continue
+        v = res[key]
+        step_s = max(v["compute_s"], v["memory_s"], v["collective_s"])
+        key_opt = key + "|optimized"
+        v2 = res.get(key_opt)
+        step_opt_s = (
+            max(v2["compute_s"], v2["memory_s"], v2["collective_s"]) if v2 and v2.get("status") == "ok" else None
+        )
+        cfg = get_config(arch)
+        gb = cfg.param_counts()["total"] * 2 / 1e9
+        cloud_ms = net + step_s * 1e3 * CHUNK_LEN
+
+        # mode 1 — proportional split (a vision/entropy trigger NEEDS a
+        # resident fraction of the actual model to compute its signal)
+        edge_gb = gb * EDGE_SPLIT_FRACTION
+        edge_ms = edge_gb * hw.rate_edge_ms_per_gb * 1.055
+        total_prop = edge_ms + cloud_ms
+        # mode 2 — fixed 2.4 GB edge policy: the kinematic trigger reads
+        # sensors, not activations, so the edge footprint is DECOUPLED from
+        # the cloud model size (the beyond-paper deployment insight)
+        edge_fixed_ms = 2.4 * hw.rate_edge_ms_per_gb * 1.055
+        total_fixed = edge_fixed_ms + cloud_ms
+
+        rows.append({
+            "arch": arch,
+            "params_gb": round(gb, 1),
+            "cloud_ms_per_chunk": round(cloud_ms, 1),
+            "cloud_ms_opt": round(net + step_opt_s * 1e3 * CHUNK_LEN, 1) if step_opt_s else None,
+            "edge_gb_prop": round(edge_gb, 2),
+            "total_ms_prop_split": round(total_prop, 1),
+            "prop_meets_400ms": total_prop <= BUDGET_MS,
+            "total_ms_fixed_edge": round(total_fixed, 1),
+            "fixed_meets_400ms": total_fixed <= BUDGET_MS,
+            "decode_bottleneck": v["bottleneck"],
+        })
+    return rows
+
+
+def main():
+    rows = arch_serving_rows()
+    print(
+        "arch,params_gb,cloud_ms,cloud_ms_opt,edge_gb_prop,total_prop,prop_ok,"
+        "total_fixed_edge,fixed_ok,bottleneck"
+    )
+    for r in rows:
+        print(
+            f"{r['arch']},{r['params_gb']},{r['cloud_ms_per_chunk']},{r['cloud_ms_opt']},"
+            f"{r['edge_gb_prop']},{r['total_ms_prop_split']},{r['prop_meets_400ms']},"
+            f"{r['total_ms_fixed_edge']},{r['fixed_meets_400ms']},{r['decode_bottleneck']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""§Roofline benchmark: render the dry-run JSON into the per-(arch × shape ×
+mesh) three-term table, plus baseline-vs-optimized §Perf deltas from the
+analytic cost model."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, supports_shape
+from repro.roofline.analysis import HW_V5E
+from repro.roofline.costmodel import estimate
+
+RESULTS = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def load_results():
+    if not os.path.exists(RESULTS):
+        return {}
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def roofline_rows():
+    res = load_results()
+    rows = []
+    for key in sorted(k for k, v in res.items() if v.get("status") == "ok"):
+        v = res[key]
+        rows.append({
+            "arch": v["arch"], "shape": v["shape"], "mesh": v["mesh"],
+            "compute_s": round(v["compute_s"], 5),
+            "memory_s": round(v["memory_s"], 5),
+            "collective_s": round(v["collective_s"], 5),
+            "bottleneck": v["bottleneck"],
+            "useful_ratio": round(v["useful_ratio"], 3),
+            "mem_gb_per_dev": round(v["mem_per_device_gb"], 2),
+            "fits_16gb": v["mem_per_device_gb"] <= 16.0,
+        })
+    return rows
+
+
+def perf_deltas():
+    """Baseline vs optimized analytic terms for every runnable pair."""
+
+    chips = 256
+    rows = []
+    for arch in ARCH_IDS:
+        if arch == "openvla-7b":
+            continue
+        cfg = get_config(arch)
+        for name, shape in INPUT_SHAPES.items():
+            if not supports_shape(cfg, shape):
+                continue
+            base = estimate(cfg, shape, optimized=False)
+            opt = estimate(cfg, shape, optimized=True)
+            c0 = base.flops / (chips * HW_V5E.peak_flops)
+            c1 = opt.flops / (chips * HW_V5E.peak_flops)
+            m0 = base.hbm_bytes / (chips * HW_V5E.hbm_bw)
+            m1 = opt.hbm_bytes / (chips * HW_V5E.hbm_bw)
+            rows.append({
+                "arch": arch, "shape": name,
+                "compute_s": round(c0, 5), "compute_opt_s": round(c1, 5),
+                "compute_x": round(c0 / max(c1, 1e-12), 2),
+                "memory_s": round(m0, 5), "memory_opt_s": round(m1, 5),
+                "memory_x": round(m0 / max(m1, 1e-12), 2),
+                "useful_base": round(base.flops_model / max(base.flops, 1), 3),
+                "useful_opt": round(opt.flops_model / max(opt.flops, 1), 3),
+            })
+    return rows
+
+
+def main():
+    rows = roofline_rows()
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,useful,mem_gb,fits")
+    for r in rows:
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']},{r['memory_s']},"
+            f"{r['collective_s']},{r['bottleneck']},{r['useful_ratio']},"
+            f"{r['mem_gb_per_dev']},{r['fits_16gb']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""One benchmark per paper table (I-V) + the hyper-parameter study.
+
+Each function returns (rows, derived) where rows are printable dicts and
+``derived`` is the table's headline quantity.  ``run.py`` wraps them in the
+``name,us_per_call,derived`` CSV contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime.engine import EngineConfig, evaluate_strategy
+from repro.runtime.latency import HardwareModel, PROFILES
+from repro.core.trigger import TriggerConfig
+
+
+def _fmt_row(name, r):
+    rep = r["report"]
+    return {
+        "method": name,
+        "cloud_ms": round(rep.cloud_ms, 1),
+        "cloud_gb": round(rep.cloud_gb, 1),
+        "edge_ms": round(rep.edge_ms, 1),
+        "edge_gb": round(rep.edge_gb, 1),
+        "total_ms": round(r["total_ms"], 1),
+        "total_std": round(r["total_ms_std"], 1),
+        "accuracy": round(r["accuracy"], 3),
+        "offload_frac": round(r["offload_fraction"], 3),
+    }
+
+
+def table1_vision_noise():
+    """Table I: vision-based dynamic strategy under noise regimes."""
+
+    rows = []
+    for regime in ("standard", "visual_noise", "distraction"):
+        r = evaluate_strategy("vision", regime=regime)
+        row = _fmt_row(f"vision/{regime}", r)
+        row["paper_total_ms"] = {"standard": 395.4, "visual_noise": 520.6,
+                                 "distraction": 685.3}[regime]
+        rows.append(row)
+    derived = rows[-1]["total_ms"] / rows[0]["total_ms"]  # degradation factor
+    return rows, derived
+
+
+def table3_simulation():
+    """Table III: LIBERO-style simulation benchmark comparison."""
+
+    paper = {
+        "edge_only": 782.5, "cloud_only": 113.8, "vision": 377.7, "rapid": 222.9,
+    }
+    rows = []
+    for s in ("edge_only", "cloud_only", "vision", "rapid"):
+        r = evaluate_strategy(s)
+        row = _fmt_row(s, r)
+        row["paper_total_ms"] = paper[s]
+        rows.append(row)
+    rapid = next(r for r in rows if r["method"] == "rapid")
+    vision = next(r for r in rows if r["method"] == "vision")
+    return rows, vision["total_ms"] / rapid["total_ms"]  # speedup
+
+
+def table4_real_world():
+    """Table IV: real-world anchors (812.6 / 121.5 ms, 14.5 GB model)."""
+
+    hw = HardwareModel.calibrated(
+        full_model_gb=14.5, edge_only_ms=812.6, cloud_only_ms=121.5,
+        safe_cloud_ms=68.3, safe_cloud_gb=10.2,
+    )
+    paper = {
+        "edge_only": 812.6, "cloud_only": 121.5, "vision": 414.1, "rapid": 239.7,
+    }
+    rows = []
+    for s in ("edge_only", "cloud_only", "vision", "rapid"):
+        r = evaluate_strategy(s, hw=hw)
+        row = _fmt_row(s, r)
+        row["paper_total_ms"] = paper[s]
+        rows.append(row)
+    rapid = next(r for r in rows if r["method"] == "rapid")
+    vision = next(r for r in rows if r["method"] == "vision")
+    speedup = vision["total_ms"] / rapid["total_ms"]
+    return rows, speedup  # paper: 1.73x
+
+
+def table5_ablation():
+    """Table V: dual-threshold ablation."""
+
+    paper = {"rapid_no_comp": 280.9, "rapid_no_red": 315.6, "rapid": 222.9}
+    rows = []
+    for s in ("rapid_no_comp", "rapid_no_red", "rapid"):
+        r = evaluate_strategy(s)
+        row = _fmt_row(s, r)
+        row["paper_total_ms"] = paper[s]
+        rows.append(row)
+    return rows, rows[-1]["total_ms"]
+
+
+def hyperparameter_sweep():
+    """§VI-D.1: θ_comp / θ_red sensitivity around the paper optimum."""
+
+    rows = []
+    best = None
+    for tc in (0.35, 0.65, 1.0, 2.0):
+        for tr in (0.2, 0.35, 0.65, 1.0):
+            cfg = EngineConfig(trigger=TriggerConfig(theta_comp=tc, theta_red=tr))
+            r = evaluate_strategy("rapid", cfg=cfg)
+            score = r["total_ms"] - 200.0 * r["accuracy"]
+            rows.append({
+                "theta_comp": tc, "theta_red": tr,
+                "total_ms": round(r["total_ms"], 1),
+                "accuracy": round(r["accuracy"], 3),
+                "offload_frac": round(r["offload_fraction"], 3),
+            })
+            if best is None or score < best[0]:
+                best = (score, tc, tr)
+    return rows, (best[1], best[2])
+
+
+def table2_redundancy(train_steps: int = 150):
+    """Table II: attention-redundancy statistics of a VLA trained on the
+    synthetic episode suite, + the torque correlation (Fig. 3)."""
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core.redundancy import (
+        pearson_correlation,
+        redundancy_stats,
+        step_attention_weights,
+        surrogate_agreement,
+    )
+    from repro.data.pipeline import EpisodeTokenizer
+    from repro.launch.train import main as train_main
+    from repro.models.attention import rope
+    from repro.models.layers import rms_norm, embed_lookup
+    from repro.robotics.episodes import generate_episode
+
+    res = train_main([
+        "--arch", "openvla-7b", "--smoke", "--steps", str(train_steps),
+        "--batch", "8", "--seq", "168", "--data", "episodes",
+    ])
+    model, params = res["model"], res["params"]
+    cfg = model.cfg
+    tok = EpisodeTokenizer(cfg.vocab_size)
+
+    def layer0_attention_probs(tokens):
+        """Attention probabilities of layer 0 over the token sequence."""
+
+        x = embed_lookup(tokens, params["embed"], cfg.d_model, cfg.scale_embeddings)
+        p0 = jax.tree.map(lambda a: a[0], params["unit"][0])
+        h = rms_norm(x.astype(model.dtype), p0["norm1"], cfg.norm_eps)
+        b, s, _ = h.shape
+        hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+        q = (h @ p0["attn"]["wq"].astype(h.dtype)).reshape(b, s, nh, hd)
+        k = (h @ p0["attn"]["wk"].astype(h.dtype)).reshape(b, s, nkv, hd)
+        pos = jnp.arange(s)[None, :]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        kr = jnp.repeat(k, nh // nkv, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * hd**-0.5
+        mask = pos[:, None, :, None] >= pos[:, None, None, :]
+        mask = jnp.moveaxis(mask, -1, -2) if False else (
+            jnp.arange(s)[None, None, :, None] >= jnp.arange(s)[None, None, None, :]
+        )
+        logits = jnp.where(mask, logits, -1e30)
+        return jax.nn.softmax(logits.astype(jnp.float32), -1)
+
+    rows = []
+    corrs, agrees = [], []
+    stride = 8
+    for task in ("pick_place", "drawer_open", "peg_insertion"):
+        ep = generate_episode(task, seed=11)
+        toks = tok.episode_tokens(ep, stride=stride)  # [L, W]
+        l_steps, w = toks.shape
+        l_steps = min(l_steps, 48)  # keep the quadratic attention tractable
+        flat = jnp.asarray(toks[:l_steps].reshape(1, -1))
+        probs = layer0_attention_probs(flat)  # [1, H, S, S]
+        # mass received by each step's ACTION tokens (last 7 of each group),
+        # normalized by how many queries CAN attend to each column (causal
+        # attention otherwise concentrates mass on early positions — the
+        # "attention sink" position bias would swamp the content signal)
+        s_tot = l_steps * w
+        recv = np.asarray(probs[0].mean(0).sum(0))  # col mass, [S]
+        receivable = (s_tot - np.arange(s_tot)).astype(np.float32)
+        recv = recv / receivable
+        step_mass = recv.reshape(l_steps, w)[:, -7:].sum(-1)
+        weights = jnp.asarray(step_mass / max(step_mass.sum(), 1e-9))[None]
+        st = redundancy_stats(weights)
+        # kinematic surrogate: torque variation magnitude per (strided) step
+        dtau = np.abs(np.diff(ep.tau, axis=0, prepend=ep.tau[:1])).sum(-1)
+        surr = dtau[::stride][:l_steps]
+        corr = float(pearson_correlation(jnp.asarray(surr)[None], weights)[0])
+        agree = float(surrogate_agreement(jnp.asarray(surr)[None], weights)[0])
+        corrs.append(corr); agrees.append(agree)
+        rows.append({
+            "task": task,
+            "L": l_steps,
+            "uniform": round(1.0 / l_steps, 4),
+            "p_red": round(float(st.p_red[0]), 3),
+            "p_crit": round(float(st.p_crit[0]), 3),
+            "w_red": round(float(st.w_red[0]), 4),
+            "w_crit": round(float(st.w_crit[0]), 4),
+            "torque_corr": round(corr, 3),
+            "surrogate_agree": round(agree, 3),
+        })
+    return rows, float(np.mean(corrs))

@@ -1,0 +1,37 @@
+"""Quickstart: the RAPID trigger + dispatcher on a synthetic episode.
+
+Runs the kinematic dual-threshold monitor over a Pick&Place episode,
+compares against the vision-based entropy baseline, and prints the
+latency/accuracy table row for each strategy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.runtime.engine import evaluate_strategy
+
+
+def main():
+    print("== RAPID vs baselines (LIBERO-style simulation, Table III) ==")
+    rows = {}
+    for strategy in ("edge_only", "cloud_only", "vision", "rapid"):
+        r = evaluate_strategy(strategy)
+        rows[strategy] = r
+        rep = r["report"]
+        print(
+            f"{strategy:12s} cloud={rep.cloud_ms:6.1f}ms ({rep.cloud_gb:4.1f}GB)  "
+            f"edge={rep.edge_ms:6.1f}ms ({rep.edge_gb:4.1f}GB)  "
+            f"total={r['total_ms']:6.1f}ms  accuracy={r['accuracy']:.3f}"
+        )
+    speedup = rows["vision"]["total_ms"] / rows["rapid"]["total_ms"]
+    print(f"\nRAPID speedup vs vision-based partitioning: {speedup:.2f}x")
+    print("\n== noise immunity (Table I) ==")
+    for regime in ("standard", "visual_noise", "distraction"):
+        v = evaluate_strategy("vision", regime=regime)["total_ms"]
+        r = evaluate_strategy("rapid", regime=regime)["total_ms"]
+        print(f"{regime:14s} vision={v:6.1f}ms   rapid={r:6.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

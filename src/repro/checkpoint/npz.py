@@ -1,0 +1,74 @@
+"""Pytree checkpointing to .npz (offline container: no orbax/tensorstore).
+
+Flattens arbitrary pytrees with '/'-joined key paths; restores into the
+original structure given a matching template.  Atomic via tmp+rename.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16; restore() casts
+            arr = arr.astype(np.float32)  # back to the template dtype
+        out[key] = arr
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree, step: Optional[int] = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"ckpt_{step:08d}.npz")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp if tmp.endswith(".npz") else tmp, path)
+    # np.savez appends .npz to names without extension
+    if os.path.exists(tmp + ".npz"):
+        os.replace(tmp + ".npz", path)
+    if os.path.exists(tmp):
+        os.remove(tmp)
+    return path
+
+
+def restore(path: str, template) -> Any:
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(_path_str(x) for x in p)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.npz$")
+    best, best_step = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best

@@ -1,0 +1,279 @@
+"""Config system for the RAPID reproduction framework.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (the exact published dims, cited) and ``smoke_config()`` (a reduced
+same-family variant for CPU smoke tests).  ``registry()`` maps ``--arch <id>``
+to the full config.
+
+Design notes
+------------
+* Plain frozen dataclasses — no external config library, but the same
+  shape as MaxText-style configs: model dims + family flags + sharding
+  logical-axis rules + serving shapes.
+* ``ModelConfig`` is family-polymorphic: ``block_pattern`` decides per-layer
+  block type ("attn", "mamba", "slstm", "mlstm"), so dense/MoE/hybrid/SSM
+  architectures share one stack builder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    # MoE layers replace dense MLP every `every` layers (1 = all layers).
+    every: int = 1
+    # capacity factor used by the dense one-hot dispatch cost model
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM block dims."""
+
+    state_dim: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block dims (sLSTM + mLSTM mix, arXiv:2405.04517)."""
+
+    # indices (mod pattern length) that are sLSTM; the rest are mLSTM
+    slstm_every: int = 2  # every 2nd block is sLSTM (1:1 mix for 125m)
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.3334
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | vlm | audio | ssm
+    citation: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- attention flavour ---
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 = global attention
+    # alternating local/global (gemma2): window applies on even layers only
+    local_global_alternating: bool = False
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    # --- mlp flavour ---
+    mlp_activation: str = "silu"  # silu (swiglu) | gelu (geglu) | gelu_plain
+    gated_mlp: bool = True
+    # --- norm / embedding ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma style sqrt(d_model) scaling
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # per-layer block types; None -> all "attn".  For hybrids (jamba) a
+    # repeating pattern like ("mamba",)*7 + ("attn",) is tiled over layers.
+    block_pattern: Optional[Tuple[str, ...]] = None
+    # --- enc-dec (seamless) ---
+    encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    # --- multimodal stub frontends ---
+    modality: str = "text"  # text | vision | audio
+    num_modality_tokens: int = 0  # prepended stub embedding tokens
+    # --- misc / numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # sub-quadratic long-context serving supported?
+    subquadratic_decode: bool = False
+    # window used by attention layers when serving beyond-window contexts
+    long_context_window: int = 32_768
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def blocks(self) -> Tuple[str, ...]:
+        if self.block_pattern is None:
+            return ("attn",) * self.num_layers
+        pat = self.block_pattern
+        reps = (self.num_layers + len(pat) - 1) // len(pat)
+        return (pat * reps)[: self.num_layers]
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None or self.moe.num_experts == 0:
+            return False
+        return (i % self.moe.every) == (self.moe.every - 1)
+
+    # --- parameter counting (for roofline MODEL_FLOPS = 6*N*D) ---------
+    def param_counts(self) -> dict:
+        """Returns dict with total and active (per-token) param counts."""
+        d, hd = self.d_model, self.resolved_head_dim
+        nh, nkv = self.num_heads, self.num_kv_heads
+        total = 0
+        active = 0
+        emb = self.vocab_size * d
+        total += emb
+        active += emb * 0  # embedding lookup not matmul flops; keep out
+        # lm head
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        total += head
+        active += self.vocab_size * d  # logits matmul always runs
+        for i, blk in enumerate(self.blocks):
+            if blk == "attn":
+                p = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+            elif blk == "mamba":
+                s = self.ssm or SSMConfig()
+                d_in = s.expand * d
+                dtr = s.dt_rank or -(-d // 16)
+                p = (
+                    d * 2 * d_in  # in_proj (x and z)
+                    + d_in * s.conv_width  # conv
+                    + d_in * (dtr + 2 * s.state_dim)  # x_proj
+                    + dtr * d_in  # dt_proj
+                    + d_in * s.state_dim  # A (log)
+                    + d_in  # D
+                    + d_in * d  # out_proj
+                )
+            elif blk in ("slstm", "mlstm"):
+                x = self.xlstm or XLSTMConfig()
+                if blk == "mlstm":
+                    # up-proj (x & z branches), q/k/v over inner dim, out-proj
+                    d_in = int(x.proj_factor_mlstm * d)
+                    p = d * 2 * d_in + 3 * d_in * d_in + d_in * d
+                else:
+                    # sLSTM: 4 gates, each with input + recurrent weights,
+                    # followed by a GLU-style up/down projection
+                    d_up = int(x.proj_factor_slstm * d)
+                    p = 8 * d * d + 2 * d * d_up
+            else:
+                raise ValueError(blk)
+            # MLP is present on a layer iff d_ff > 0 (jamba: MoE MLP on mamba
+            # layers too; xlstm: d_ff == 0, no MLP).
+            mlp_active = mlp_total = 0
+            if self.d_ff > 0:
+                if self.is_moe_layer(i):
+                    m = self.moe
+                    per_exp = (3 if self.gated_mlp else 2) * d * self.d_ff
+                    mlp_total = m.num_experts * per_exp + d * m.num_experts
+                    mlp_active = m.num_experts_per_tok * per_exp + d * m.num_experts
+                else:
+                    mlp_total = mlp_active = (3 if self.gated_mlp else 2) * d * self.d_ff
+            total += p + mlp_total
+            active += p + mlp_active
+        if self.encoder_decoder:
+            # encoder layers: self-attn + mlp, plus decoder cross-attn
+            enc = self.num_encoder_layers * (
+                d * (nh * hd) * 2 + 2 * d * (nkv * hd) * 1
+                + (2 if not self.gated_mlp else 3) * d * self.d_ff
+            )
+            cross = self.num_layers * (d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d)
+            total += enc + cross
+            active += enc + cross
+        return {"total": total, "active": active}
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "phi3.5-moe-42b-a6.6b",
+    "gemma2-9b",
+    "qwen3-moe-235b-a22b",
+    "gemma-7b",
+    "jamba-1.5-large-398b",
+    "phi-3-vision-4.2b",
+    "h2o-danube-3-4b",
+    "seamless-m4t-medium",
+    "starcoder2-3b",
+    "xlstm-125m",
+    "openvla-7b",  # the paper's own backbone
+)
+
+_MODULE_FOR = {
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "gemma2-9b": "gemma2_9b",
+    "qwen3-moe-235b-a22b": "qwen3_moe",
+    "gemma-7b": "gemma_7b",
+    "jamba-1.5-large-398b": "jamba_15_large",
+    "phi-3-vision-4.2b": "phi3_vision",
+    "h2o-danube-3-4b": "h2o_danube3",
+    "seamless-m4t-medium": "seamless_m4t",
+    "starcoder2-3b": "starcoder2_3b",
+    "xlstm-125m": "xlstm_125m",
+    "openvla-7b": "openvla",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch_id]}")
+    return mod.smoke_config()
+
+
+def registry() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Whether (arch, shape) is a runnable dry-run combination.
+
+    ``long_500k`` requires sub-quadratic decode (SSM/hybrid/sliding-window);
+    skips are documented in DESIGN.md §4.
+    """
+
+    if shape.name == "long_500k" and not cfg.subquadratic_decode:
+        return False
+    return True

@@ -1,0 +1,49 @@
+"""Jamba 1.5 Large (398B total).
+
+[arXiv:2403.19887] — 72 layers, d_model 8192, attention layers have 64 heads
+(GQA kv=8), FFN 24576, vocab 65536.  Mamba:attention interleave 7:1 (one
+attention layer per 8-layer block), MoE (16 experts top-2) on every other
+layer.  Sub-quadratic decode via the Mamba state (attention layers windowed
+for the 500k shape).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+# one attention layer per 8, placed mid-block as in the Jamba paper
+_PATTERN = ("mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba", "mamba")
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    citation="arXiv:2403.19887",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    head_dim=128,
+    rope_theta=10_000.0,  # jamba uses no explicit positional enc on attn; RoPE kept for stack uniformity
+    mlp_activation="silu",
+    gated_mlp=True,
+    moe=MoEConfig(num_experts=16, num_experts_per_tok=2, every=2),
+    ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    block_pattern=_PATTERN,
+    subquadratic_decode=True,
+    long_context_window=32_768,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name="jamba-smoke",
+        num_layers=4,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2, every=2),
+        block_pattern=("mamba", "attn"),
+    )

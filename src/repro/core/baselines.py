@@ -1,0 +1,105 @@
+"""Baseline partitioning strategies the paper compares against (§VI-A.3).
+
+  * Edge-Only — the full VLA runs on the edge device; never offloads.
+  * Cloud-Only — every chunk is fetched from the cloud.
+  * Vision-based dynamic partitioning (SAFE/ISAR style) — offload when the
+    Shannon entropy H of the VLA action distribution exceeds a threshold.
+    This is the environment-oriented strategy whose noise fragility
+    motivates RAPID (paper §III-A, Table I).
+  * Static split — offload every ``period`` steps regardless of state
+    (traditional fixed partitioning).
+
+All share the dispatcher's queue semantics so the engine can run any policy
+through one code path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatcher import DispatcherConfig, QueueState, queue_init
+
+
+@dataclass(frozen=True)
+class EntropyTriggerConfig:
+    threshold: float = 2.2      # nats; offload when H exceeds
+    cooldown_steps: int = 15
+    chunk_len: int = 8
+    action_dim: int = 7
+
+
+class EntropyState(NamedTuple):
+    queue: QueueState
+    cooldown: jax.Array
+
+
+def action_entropy(action_logits: jax.Array) -> jax.Array:
+    """Shannon entropy of the action-token distribution. [..., V] -> [...]."""
+
+    logp = jax.nn.log_softmax(action_logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def entropy_init(cfg: EntropyTriggerConfig, batch_shape=()) -> EntropyState:
+    dcfg = DispatcherConfig(chunk_len=cfg.chunk_len, action_dim=cfg.action_dim)
+    return EntropyState(
+        queue=queue_init(dcfg, batch_shape),
+        cooldown=jnp.zeros(batch_shape, jnp.int32),
+    )
+
+
+def entropy_step(
+    state: EntropyState,
+    entropy: jax.Array,          # [...] H of the edge model's action head
+    cloud_chunk: jax.Array,      # [..., k, A]
+    cfg: EntropyTriggerConfig,
+):
+    k = cfg.chunk_len
+    queue_empty = state.queue.head >= k
+    trig = entropy > cfg.threshold
+    dispatch = (trig & (state.cooldown == 0)) | queue_empty
+    cooldown = jnp.where(dispatch, cfg.cooldown_steps, jnp.maximum(state.cooldown - 1, 0))
+
+    off = dispatch[..., None, None]
+    chunk = jnp.where(off, cloud_chunk, state.queue.chunk)
+    head = jnp.where(dispatch, 0, state.queue.head)
+    idx = jnp.minimum(head, k - 1)
+    action = jnp.take_along_axis(chunk, idx[..., None, None].astype(jnp.int32), -2)[..., 0, :]
+    head = jnp.minimum(head + 1, k)
+    return EntropyState(QueueState(chunk, head), cooldown), (action, dispatch)
+
+
+def run_entropy_episode(cfg: EntropyTriggerConfig, entropies, cloud_chunks, state=None):
+    """Scan the vision-based baseline over [T, ...] entropy + chunk streams."""
+
+    if state is None:
+        state = entropy_init(cfg, entropies.shape[1:])
+
+    def step(s, inp):
+        h, chunk = inp
+        return entropy_step(s, h, chunk, cfg)
+
+    return jax.lax.scan(step, state, (entropies, cloud_chunks))
+
+
+def static_offload_mask(n_steps: int, period: int) -> jnp.ndarray:
+    """Static split: offload every ``period`` control ticks."""
+
+    t = jnp.arange(n_steps)
+    return (t % period) == 0
+
+
+def cloud_only_mask(n_steps: int, chunk_len: int) -> jnp.ndarray:
+    """Cloud-Only: a query at every chunk boundary."""
+
+    return static_offload_mask(n_steps, chunk_len)
+
+
+def edge_only_mask(n_steps: int) -> jnp.ndarray:
+    """Edge-Only: no cloud queries at all (full model on edge)."""
+
+    return jnp.zeros((n_steps,), bool)

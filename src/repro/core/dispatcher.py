@@ -1,0 +1,150 @@
+"""RAPID edge dispatcher — Algorithm 1 as a stateful, scannable step.
+
+The dispatcher owns the cached action-chunk queue Q and the trigger state.
+Cloud interaction is abstracted: each tick the caller supplies the chunk the
+cloud *would* return for the current observation (in simulation the episode
+generator provides it; in a deployment the runtime engine fills it from the
+real ``serve_step``).  The dispatcher decides whether to preempt-and-overwrite
+(dispatch) or keep executing the cached chunk — exactly Algorithm 1.
+
+All state is fixed-shape, so the whole closed loop vmaps over robot fleets
+and scans over episodes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kinematics as kin
+from repro.core.trigger import (
+    TriggerConfig,
+    TriggerOutput,
+    TriggerState,
+    trigger_init,
+    trigger_step,
+)
+
+
+@dataclass(frozen=True)
+class DispatcherConfig:
+    trigger: TriggerConfig = field(default_factory=TriggerConfig)
+    chunk_len: int = 8         # k — action-chunk horizon
+    action_dim: int = 7
+
+
+class QueueState(NamedTuple):
+    chunk: jax.Array   # [..., k, A] cached action chunk
+    head: jax.Array    # [...] int32 next action index (== k -> empty)
+
+
+class DispatcherState(NamedTuple):
+    trigger: TriggerState
+    queue: QueueState
+
+
+class DispatchOutput(NamedTuple):
+    action: jax.Array      # [..., A] action executed this control tick
+    offloaded: jax.Array   # bool — cloud query issued (I_dispatch)
+    edge_refill: jax.Array  # bool — queue refilled by the small edge policy
+    trig: TriggerOutput
+
+
+def queue_init(cfg: DispatcherConfig, batch_shape=()) -> QueueState:
+    return QueueState(
+        chunk=jnp.zeros(batch_shape + (cfg.chunk_len, cfg.action_dim), jnp.float32),
+        head=jnp.full(batch_shape, cfg.chunk_len, jnp.int32),  # start empty
+    )
+
+
+def dispatcher_init(cfg: DispatcherConfig, batch_shape=()) -> DispatcherState:
+    return DispatcherState(
+        trigger=trigger_init(cfg.trigger, batch_shape),
+        queue=queue_init(cfg, batch_shape),
+    )
+
+
+def dispatcher_step(
+    state: DispatcherState,
+    frame: kin.KinematicFrame,
+    cloud_chunk: jax.Array,
+    cfg: DispatcherConfig,
+    edge_chunk: Optional[jax.Array] = None,
+) -> Tuple[DispatcherState, DispatchOutput]:
+    """One control tick of Algorithm 1.
+
+    cloud_chunk [..., k, A]: the chunk the cloud VLA π_θ(O_t) would return
+    *if queried now*.
+    edge_chunk: the chunk the small resident edge policy would produce.  Per
+    the paper's partitioning (edge footprint 2.4 GB vs 14.2 GB full VLA),
+    routine queue refills during redundant phases are served by the edge
+    policy; only trigger-dispatched refills hit the cloud.  When
+    ``edge_chunk`` is None the queue-depletion path also queries the cloud
+    (pure offload mode — Algorithm 1's literal line 6).
+    """
+
+    k = cfg.chunk_len
+    queue_empty = state.queue.head >= k
+
+    # Algorithm 1 lines 1-5 + Eq.8 cooldown masking
+    trig_state, trig_out = trigger_step(
+        state.trigger,
+        frame,
+        cfg.trigger,
+        queue_empty=queue_empty if edge_chunk is None else None,
+    )
+    offload = trig_out.dispatch
+    edge_refill = (
+        jnp.zeros_like(offload)
+        if edge_chunk is None
+        else (queue_empty & ~offload)
+    )
+
+    # line 7: preemption — overwrite Q with the fresh chunk
+    refill = offload | edge_refill
+    source = cloud_chunk if edge_chunk is None else jnp.where(
+        offload[..., None, None], cloud_chunk, edge_chunk
+    )
+    chunk = jnp.where(refill[..., None, None], source, state.queue.chunk)
+    head = jnp.where(refill, 0, state.queue.head)
+
+    # line 9: dispatch action a_t <- pop(Q)
+    idx = jnp.minimum(head, k - 1)
+    action = jnp.take_along_axis(
+        chunk, idx[..., None, None].astype(jnp.int32), axis=-2
+    )[..., 0, :]
+    head = jnp.minimum(head + 1, k)
+
+    new_state = DispatcherState(trigger=trig_state, queue=QueueState(chunk, head))
+    return new_state, DispatchOutput(
+        action=action, offloaded=offload, edge_refill=edge_refill, trig=trig_out
+    )
+
+
+def run_episode(
+    cfg: DispatcherConfig,
+    frames: kin.KinematicFrame,       # [T, ..., N] streams
+    cloud_chunks: jax.Array,          # [T, ..., k, A] chunk-if-queried-now
+    state: Optional[DispatcherState] = None,
+    edge_chunks: Optional[jax.Array] = None,
+):
+    """Scan Algorithm 1 over an episode.  Returns (final state, outputs)."""
+
+    if state is None:
+        state = dispatcher_init(cfg, frames.q.shape[1:-1])
+
+    if edge_chunks is None:
+        def step(s, inp):
+            f, chunk = inp
+            return dispatcher_step(s, kin.KinematicFrame(*f), chunk, cfg)
+
+        return jax.lax.scan(step, state, (tuple(frames), cloud_chunks))
+
+    def step(s, inp):
+        f, chunk, echunk = inp
+        return dispatcher_step(s, kin.KinematicFrame(*f), chunk, cfg, edge_chunk=echunk)
+
+    return jax.lax.scan(step, state, (tuple(frames), cloud_chunks, edge_chunks))

@@ -1,0 +1,68 @@
+"""Kinematic feature extraction (paper §IV-A/B, Eq. 2-5).
+
+All functions are pure jnp, elementwise over arbitrary leading batch dims, so
+the same code serves the single-robot 500 Hz loop, the batched fleet monitor,
+and the Pallas ``rolling_stats`` kernel's oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class KinematicFrame(NamedTuple):
+    """One proprioceptive sample for an N-DoF manipulator."""
+
+    q: jax.Array      # joint positions  [..., N]
+    qd: jax.Array     # joint velocities [..., N]
+    tau: jax.Array    # joint torques    [..., N]
+
+
+def finite_diff_accel(qd: jax.Array, qd_prev: jax.Array, dt: float) -> jax.Array:
+    """Eq. 2: instantaneous joint acceleration via finite difference."""
+
+    return (qd - qd_prev) / dt
+
+
+def end_joint_weights(n_joints: int, emphasis: float = 2.0) -> jax.Array:
+    """Diagonal weights W assigning higher significance to end joints.
+
+    Linear ramp from 1.0 (base joint) to ``emphasis`` (end effector), as the
+    paper's W_a / W_tau prescribe wrist-joint sensitivity.
+    """
+
+    return jnp.linspace(1.0, emphasis, n_joints)
+
+
+def accel_magnitude(accel: jax.Array, w_a: jax.Array) -> jax.Array:
+    """Eq. 4: M_acc = ||W_a q̈||_2 over the joint axis."""
+
+    return jnp.sqrt(jnp.sum(jnp.square(w_a * accel), axis=-1))
+
+
+def torque_variation(tau: jax.Array, tau_prev: jax.Array) -> jax.Array:
+    """Δτ_t = τ_t − τ_{t−1}: isolates interaction torque from gravity/inertia."""
+
+    return tau - tau_prev
+
+
+def torque_power(dtau: jax.Array, w_tau: jax.Array) -> jax.Array:
+    """|W_τ Δτ|² — the instantaneous term inside Eq. 5's moving average."""
+
+    return jnp.sum(jnp.square(w_tau * dtau), axis=-1)
+
+
+def velocity_norm(qd: jax.Array) -> jax.Array:
+    """v_t = ||q̇_t||_2 (drives the dynamic phase weights, Eq. 6)."""
+
+    return jnp.sqrt(jnp.sum(jnp.square(qd), axis=-1))
+
+
+def phase_weights(v: jax.Array, v_max: float):
+    """Eq. 6: ω_a = clip(v/v_max, 0, 1); ω_τ = 1 − ω_a."""
+
+    w_a = jnp.clip(v / v_max, 0.0, 1.0)
+    return w_a, 1.0 - w_a

@@ -1,0 +1,84 @@
+"""Step-wise redundancy analysis (paper §III-B, Table II, Fig. 3).
+
+Quantifies per-step action importance from the VLA's attention weights and
+its correlation with kinematic surrogates — the empirical basis of the
+redundancy-aware trigger.
+
+Definitions from Table II:
+  * per-step attention weight w_t = mean attention mass that generated
+    action tokens receive from the rest of the sequence,
+  * uniform baseline 1/L over an L-step episode,
+  * redundant steps: w_t < 1/L; critical: w_t >= 1/L,
+  * P_red/P_crit — proportions, W_red/W_crit — mean weights per class.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RedundancyStats(NamedTuple):
+    p_red: jax.Array    # proportion of redundant steps
+    p_crit: jax.Array
+    w_red: jax.Array    # mean attention weight of redundant steps
+    w_crit: jax.Array
+    uniform: jax.Array  # 1/L baseline
+    mask_critical: jax.Array  # [L] bool
+
+
+def step_attention_weights(attn: jax.Array) -> jax.Array:
+    """Per-step attention mass over action steps.
+
+    attn: [..., heads, q, L] attention probabilities onto L action steps.
+    Returns [..., L]: mean over heads and queries, normalized to sum 1.
+    """
+
+    w = jnp.mean(attn, axis=(-3, -2))
+    return w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+
+
+def redundancy_stats(weights: jax.Array) -> RedundancyStats:
+    """Table II statistics from per-step weights [..., L]."""
+
+    l = weights.shape[-1]
+    uniform = jnp.asarray(1.0 / l, jnp.float32)
+    crit = weights >= uniform
+    n = jnp.asarray(l, jnp.float32)
+    n_crit = jnp.sum(crit, -1).astype(jnp.float32)
+    n_red = n - n_crit
+    w_crit = jnp.sum(jnp.where(crit, weights, 0.0), -1) / jnp.maximum(n_crit, 1.0)
+    w_red = jnp.sum(jnp.where(crit, 0.0, weights), -1) / jnp.maximum(n_red, 1.0)
+    return RedundancyStats(
+        p_red=n_red / n,
+        p_crit=n_crit / n,
+        w_red=w_red,
+        w_crit=w_crit,
+        uniform=uniform,
+        mask_critical=crit,
+    )
+
+
+def pearson_correlation(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Correlation between kinematic surrogate and attention redundancy
+    (Fig. 3's joint-torque <-> step-importance correlation)."""
+
+    x = x - jnp.mean(x, -1, keepdims=True)
+    y = y - jnp.mean(y, -1, keepdims=True)
+    num = jnp.sum(x * y, -1)
+    den = jnp.sqrt(jnp.sum(x * x, -1) * jnp.sum(y * y, -1))
+    return num / jnp.maximum(den, 1e-9)
+
+
+def surrogate_agreement(kinematic_score: jax.Array, weights: jax.Array) -> jax.Array:
+    """Fraction of steps where the kinematic surrogate and the attention
+    criterion agree on redundant-vs-critical (classification view of Fig. 3).
+    """
+
+    l = weights.shape[-1]
+    attn_crit = weights >= (1.0 / l)
+    kin_thresh = jnp.mean(kinematic_score, -1, keepdims=True)
+    kin_crit = kinematic_score >= kin_thresh
+    return jnp.mean((attn_crit == kin_crit).astype(jnp.float32), -1)

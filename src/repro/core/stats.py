@@ -1,0 +1,98 @@
+"""Rolling statistics for the RAPID monitors.
+
+Two flavours, matching the paper:
+  * :class:`WindowStats` — sliding-window mean/std over the last ``w``
+    samples (ring buffer), used by the acceleration monitor ("dynamic sliding
+    window statistics").
+  * :class:`RunningStats` — Welford running mean/std over all history, used
+    by the torque monitor ("historical running average").
+
+Both are NamedTuple states so they scan/vmap cleanly and live in the
+dispatcher's carry.  All updates are O(1) per step (paper §V: "localized
+arithmetic operations ... O(1) computational overhead").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+class WindowStats(NamedTuple):
+    buf: jax.Array    # [..., w] ring buffer
+    idx: jax.Array    # [...] int32 write cursor
+    count: jax.Array  # [...] int32 samples seen (saturates at w)
+
+    @property
+    def window(self) -> int:
+        return self.buf.shape[-1]
+
+
+def window_init(window: int, batch_shape: Tuple[int, ...] = ()) -> WindowStats:
+    return WindowStats(
+        buf=jnp.zeros(batch_shape + (window,), jnp.float32),
+        idx=jnp.zeros(batch_shape, jnp.int32),
+        count=jnp.zeros(batch_shape, jnp.int32),
+    )
+
+
+def window_update(s: WindowStats, x: jax.Array) -> WindowStats:
+    w = s.buf.shape[-1]
+    one_hot = jax.nn.one_hot(s.idx, w, dtype=s.buf.dtype)
+    buf = s.buf * (1.0 - one_hot) + one_hot * x[..., None]
+    return WindowStats(buf, (s.idx + 1) % w, jnp.minimum(s.count + 1, w))
+
+
+def window_mean_std(s: WindowStats):
+    w = s.buf.shape[-1]
+    n = jnp.maximum(s.count, 1).astype(jnp.float32)
+    mask = jnp.arange(w) < s.count[..., None]
+    vals = jnp.where(mask, s.buf, 0.0)
+    mean = jnp.sum(vals, -1) / n
+    var = jnp.sum(jnp.where(mask, jnp.square(s.buf - mean[..., None]), 0.0), -1) / n
+    return mean, jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def window_sum(s: WindowStats) -> jax.Array:
+    mask = jnp.arange(s.buf.shape[-1]) < s.count[..., None]
+    return jnp.sum(jnp.where(mask, s.buf, 0.0), -1)
+
+
+def window_moving_average(s: WindowStats) -> jax.Array:
+    """Mean over the (possibly not yet full) window — Eq. 5's 1/w Σ."""
+
+    return window_sum(s) / jnp.maximum(s.count, 1).astype(jnp.float32)
+
+
+class RunningStats(NamedTuple):
+    count: jax.Array  # [...] float32
+    mean: jax.Array   # [...]
+    m2: jax.Array     # [...] sum of squared deviations
+
+
+def running_init(batch_shape: Tuple[int, ...] = ()) -> RunningStats:
+    z = jnp.zeros(batch_shape, jnp.float32)
+    return RunningStats(z, z, z)
+
+
+def running_update(s: RunningStats, x: jax.Array) -> RunningStats:
+    count = s.count + 1.0
+    delta = x - s.mean
+    mean = s.mean + delta / count
+    m2 = s.m2 + delta * (x - mean)
+    return RunningStats(count, mean, m2)
+
+
+def running_mean_std(s: RunningStats):
+    var = s.m2 / jnp.maximum(s.count, 1.0)
+    return s.mean, jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def normalized_score(x: jax.Array, mean: jax.Array, std: jax.Array, eps: float = EPS):
+    """M̂ = (M − μ)/(σ + ε) — the paper's normalized anomaly score."""
+
+    return (x - mean) / (std + eps)

@@ -1,0 +1,170 @@
+"""RAPID dual-threshold trigger (paper §IV-C, Eq. 6-8).
+
+The trigger consumes one kinematic frame per tick and maintains O(1) state.
+``trigger_step`` is the fully-fused scan step used by both the 500 Hz
+monitor loop and the batched fleet monitor; the Pallas ``rolling_stats``
+kernel implements the same update for lane-aligned stream batches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kinematics as kin
+from repro.core import stats as st
+
+
+@dataclass(frozen=True)
+class TriggerConfig:
+    n_joints: int = 7
+    dt: float = 0.002              # f_sensor = 500 Hz
+    v_max: float = 2.0             # rad/s normalizer for phase weights
+    theta_comp: float = 0.65       # compatibility-optimal threshold (paper optimum)
+    theta_red: float = 0.35        # redundancy-aware threshold (paper optimum)
+    window_acc: int = 64           # sliding window w_a
+    window_tau: int = 16           # short moving-average window w_tau
+    cooldown_steps: int = 8        # C — one action-chunk horizon
+    end_joint_emphasis: float = 2.0
+    warmup: int = 64               # no trigger until stats windows are filled
+    eps: float = 1e-6
+    # σ floors: anomaly normalization never divides by less than the sensor
+    # noise scale, so z-scores of pure measurement noise stay ≪ θ.  The
+    # acceleration monitor additionally floors by the *running-history* σ so
+    # that routine profile shapes seen earlier in the episode don't re-alarm.
+    sigma_floor_acc: float = 1.0   # rad/s² — joint-encoder diff noise scale
+    sigma_floor_tau: float = 0.05  # (N·m)² — torque-sensor noise power scale
+
+
+class TriggerState(NamedTuple):
+    qd_prev: jax.Array        # [..., N]
+    tau_prev: jax.Array       # [..., N]
+    acc_stats: st.WindowStats  # window over M_acc
+    acc_running: st.RunningStats  # episode-history stats over M_acc (σ floor)
+    tau_window: st.WindowStats  # short window over |WΔτ|² (Eq. 5 average)
+    tau_stats: st.RunningStats  # running stats over M_tau
+    cooldown: jax.Array       # [...] int32
+    tick: jax.Array           # [...] int32
+
+
+class TriggerOutput(NamedTuple):
+    trigger: jax.Array        # bool: Eq. 7
+    dispatch: jax.Array       # bool: Eq. 8 (cooldown-masked)
+    importance: jax.Array     # S_imp = ω_a M̂_acc + ω_τ M̂_τ
+    score_acc: jax.Array      # M̂_acc
+    score_tau: jax.Array      # M̂_τ
+    w_acc: jax.Array          # ω_a
+    raw_acc: jax.Array        # M_acc
+    raw_tau: jax.Array        # M_τ
+
+
+def trigger_init(cfg: TriggerConfig, batch_shape: Tuple[int, ...] = ()) -> TriggerState:
+    n = cfg.n_joints
+    return TriggerState(
+        qd_prev=jnp.zeros(batch_shape + (n,), jnp.float32),
+        tau_prev=jnp.zeros(batch_shape + (n,), jnp.float32),
+        acc_stats=st.window_init(cfg.window_acc, batch_shape),
+        acc_running=st.running_init(batch_shape),
+        tau_window=st.window_init(cfg.window_tau, batch_shape),
+        tau_stats=st.running_init(batch_shape),
+        cooldown=jnp.zeros(batch_shape, jnp.int32),
+        tick=jnp.zeros(batch_shape, jnp.int32),
+    )
+
+
+def trigger_step(
+    state: TriggerState,
+    frame: kin.KinematicFrame,
+    cfg: TriggerConfig,
+    queue_empty=None,
+) -> Tuple[TriggerState, TriggerOutput]:
+    """One monitor tick (Algorithm 1 lines 1-5 + Eq. 8 masking).
+
+    ``queue_empty`` (bool, optional): when provided, a depleted action queue
+    forces a dispatch regardless of trigger/cooldown (Algorithm 1 line 6).
+    """
+
+    w_a = kin.end_joint_weights(cfg.n_joints, cfg.end_joint_emphasis)
+    w_tau = w_a
+
+    # --- line 1: extract kinematics ---
+    accel = kin.finite_diff_accel(frame.qd, state.qd_prev, cfg.dt)
+    v_t = kin.velocity_norm(frame.qd)
+    dtau = kin.torque_variation(frame.tau, state.tau_prev)
+
+    # --- line 2: raw scores + stats updates ---
+    m_acc = kin.accel_magnitude(accel, w_a)
+    acc_stats = st.window_update(state.acc_stats, m_acc)
+    acc_running = st.running_update(state.acc_running, m_acc)
+    tau_pow = kin.torque_power(dtau, w_tau)
+    tau_window = st.window_update(state.tau_window, tau_pow)
+    m_tau = st.window_moving_average(tau_window)  # Eq. 5
+    tau_stats = st.running_update(state.tau_stats, m_tau)
+
+    # --- line 3: normalized anomaly scores (σ floored; see TriggerConfig) ---
+    mu_a, sig_a = st.window_mean_std(acc_stats)
+    _, sig_a_run = st.running_mean_std(acc_running)
+    sig_a = jnp.maximum(jnp.maximum(sig_a, sig_a_run), cfg.sigma_floor_acc)
+    score_acc = st.normalized_score(m_acc, mu_a, sig_a, cfg.eps)
+    mu_t, sig_t = st.running_mean_std(tau_stats)
+    sig_t = jnp.maximum(sig_t, cfg.sigma_floor_tau)
+    score_tau = st.normalized_score(m_tau, mu_t, sig_t, cfg.eps)
+
+    # --- line 4: dynamic phase weights ---
+    omega_a, omega_t = kin.phase_weights(v_t, cfg.v_max)
+
+    # --- line 5: dual-threshold trigger (Eq. 7) ---
+    warm = state.tick >= cfg.warmup
+    trig = warm & (
+        (omega_a * score_acc > cfg.theta_comp)
+        | (omega_t * score_tau > cfg.theta_red)
+    )
+
+    # --- Eq. 8: cooldown masking (+ queue-depletion force, line 6) ---
+    dispatch = trig & (state.cooldown == 0)
+    if queue_empty is not None:
+        dispatch = dispatch | queue_empty
+    cooldown = jnp.where(
+        dispatch, cfg.cooldown_steps, jnp.maximum(state.cooldown - 1, 0)
+    )
+
+    new_state = TriggerState(
+        qd_prev=frame.qd,
+        tau_prev=frame.tau,
+        acc_stats=acc_stats,
+        acc_running=acc_running,
+        tau_window=tau_window,
+        tau_stats=tau_stats,
+        cooldown=cooldown,
+        tick=state.tick + 1,
+    )
+    out = TriggerOutput(
+        trigger=trig,
+        dispatch=dispatch,
+        importance=omega_a * score_acc + omega_t * score_tau,
+        score_acc=score_acc,
+        score_tau=score_tau,
+        w_acc=omega_a,
+        raw_acc=m_acc,
+        raw_tau=m_tau,
+    )
+    return new_state, out
+
+
+def run_trigger(
+    cfg: TriggerConfig,
+    frames: kin.KinematicFrame,
+    state: TriggerState = None,
+) -> Tuple[TriggerState, TriggerOutput]:
+    """Vectorized monitor over a [T, ..., N] stream via lax.scan."""
+
+    if state is None:
+        state = trigger_init(cfg, frames.q.shape[1:-1])
+
+    def step(s, f):
+        return trigger_step(s, kin.KinematicFrame(*f), cfg)
+
+    return jax.lax.scan(step, state, tuple(frames))

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q, k, v, *, causal=True, window=0, logit_cap=0.0
+):
+    """[B,S,H,D] x [B,S,KV,D]^2 -> [B,S,H,D]; materializes the score matrix."""
+
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    logits *= d**-0.5
+    if logit_cap:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q, cache_k, cache_v, *, cache_len, window=0, logit_cap=0.0
+):
+    """q [B,H,D], cache [B,S,KV,D] -> [B,H,D] attention over cache[:cache_len]."""
+
+    b, s, kv, d = cache_k.shape
+    h = q.shape[1]
+    g = h // kv
+    kr = jnp.repeat(cache_k, g, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(cache_v, g, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * d**-0.5
+    if logit_cap:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    pos = jnp.arange(s)[None, None, :]
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= cache_len - window
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vr).astype(q.dtype)
+
+
+def rolling_stats_ref(
+    m_acc, tau_pow, *, window_acc, window_tau,
+    sigma_floor_acc, sigma_floor_tau, eps=1e-6,
+):
+    """Oracle for the monitor kernel.  Inputs [N, T] -> scores/stats [N, T].
+
+    Mirrors core.trigger's per-tick update exactly (window z-score with
+    running-σ floor for acc; Eq.5 moving average + running z-score for τ).
+    """
+
+    n, t = m_acc.shape
+
+    def step(carry, inp):
+        (abuf, aidx, acnt, r_cnt, r_mean, r_m2,
+         tbuf, tidx, tcnt, tr_cnt, tr_mean, tr_m2) = carry
+        ma, tp = inp
+
+        wa = abuf.shape[-1]
+        one = jax.nn.one_hot(aidx, wa, dtype=abuf.dtype)
+        abuf = abuf * (1 - one) + one * ma[:, None]
+        acnt = jnp.minimum(acnt + 1, wa)
+        aidx = (aidx + 1) % wa
+        cnt_f = jnp.maximum(acnt, 1).astype(jnp.float32)
+        maskw = jnp.arange(wa)[None] < acnt[:, None]
+        mean_a = jnp.sum(jnp.where(maskw, abuf, 0), -1) / cnt_f
+        var_a = jnp.sum(jnp.where(maskw, (abuf - mean_a[:, None]) ** 2, 0), -1) / cnt_f
+        # running stats over m_acc
+        r_cnt = r_cnt + 1
+        d1 = ma - r_mean
+        r_mean = r_mean + d1 / r_cnt
+        r_m2 = r_m2 + d1 * (ma - r_mean)
+        sig_run = jnp.sqrt(jnp.maximum(r_m2 / jnp.maximum(r_cnt, 1), 0))
+        sig_a = jnp.maximum(jnp.maximum(jnp.sqrt(jnp.maximum(var_a, 0)), sig_run), sigma_floor_acc)
+        score_a = (ma - mean_a) / (sig_a + eps)
+
+        wt = tbuf.shape[-1]
+        one = jax.nn.one_hot(tidx, wt, dtype=tbuf.dtype)
+        tbuf = tbuf * (1 - one) + one * tp[:, None]
+        tcnt = jnp.minimum(tcnt + 1, wt)
+        tidx = (tidx + 1) % wt
+        maskt = jnp.arange(wt)[None] < tcnt[:, None]
+        m_tau = jnp.sum(jnp.where(maskt, tbuf, 0), -1) / jnp.maximum(tcnt, 1)
+        tr_cnt = tr_cnt + 1
+        d2 = m_tau - tr_mean
+        tr_mean = tr_mean + d2 / tr_cnt
+        tr_m2 = tr_m2 + d2 * (m_tau - tr_mean)
+        sig_t = jnp.sqrt(jnp.maximum(tr_m2 / jnp.maximum(tr_cnt, 1), 0))
+        sig_t = jnp.maximum(sig_t, sigma_floor_tau)
+        score_t = (m_tau - tr_mean) / (sig_t + eps)
+
+        carry = (abuf, aidx, acnt, r_cnt, r_mean, r_m2,
+                 tbuf, tidx, tcnt, tr_cnt, tr_mean, tr_m2)
+        return carry, (score_a, score_t, m_tau)
+
+    carry = (
+        jnp.zeros((n, window_acc)), jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+        jnp.zeros(n), jnp.zeros(n), jnp.zeros(n),
+        jnp.zeros((n, window_tau)), jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+        jnp.zeros(n), jnp.zeros(n), jnp.zeros(n),
+    )
+    _, (sa, st_, mt) = jax.lax.scan(step, carry, (m_acc.T, tau_pow.T))
+    return sa.T, st_.T, mt.T
+
+
+def mamba_scan_ref(x, dt, a, bm, c, h0=None, chunk=256):
+    """Delegates to the model's chunked SSD implementation (the oracle)."""
+
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, a, bm, c, chunk=chunk, h0=h0)

@@ -1,0 +1,24 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host devices
+before calling it; smoke tests see the default single device and use
+``make_host_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate mesh over whatever devices exist (CPU smoke/test runs)."""
+
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

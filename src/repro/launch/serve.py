@@ -1,0 +1,129 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the edge-cloud co-inference loop end to end on CPU with a smoke-scale
+cloud VLA: the RAPID dispatcher monitors simulated robot kinematics; on
+dispatch, the *actual model* (prefill + decode of action tokens through the
+KV cache) produces the chunk.  On a TPU slice the same ``CloudPolicy`` wraps
+the production-mesh sharded model.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.dispatcher import DispatcherConfig, dispatcher_init, dispatcher_step
+from repro.core.kinematics import KinematicFrame
+from repro.data.pipeline import EpisodeTokenizer
+from repro.models.model import Model
+from repro.robotics.episodes import generate_episode
+
+
+class CloudPolicy:
+    """Batched VLA serving: observation tokens -> k-step action chunk."""
+
+    def __init__(self, model: Model, params, tokenizer: EpisodeTokenizer,
+                 chunk_len: int = 8, n_joints: int = 7):
+        self.model = model
+        self.params = params
+        self.tok = tokenizer
+        self.chunk_len = chunk_len
+        self.n_joints = n_joints
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, extra=chunk_len * n_joints)
+        )
+        self._decode = jax.jit(model.decode_step)
+
+    def __call__(self, qd: np.ndarray, tau: np.ndarray) -> np.ndarray:
+        """qd/tau [B, N] -> action chunk [B, k, N] via autoregressive decode."""
+
+        obs = np.concatenate(
+            [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
+        )
+        batch = {"tokens": jnp.asarray(obs)}
+        logits, cache = self._prefill(self.params, batch)
+        # greedy decode k*N action tokens, masked to the action-bin range
+        acts = []
+        base = self.tok.action_base
+        tok = None
+        for _ in range(self.chunk_len * self.n_joints):
+            ls = logits[:, -1] if tok is None else logits[:, 0]
+            ls = ls.at[..., : base].set(-1e9)  # only action bins
+            tok = jnp.argmax(ls, axis=-1)[:, None]
+            acts.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache)
+        toks = np.concatenate(acts, axis=1)  # [B, k*N]
+        return self.tok.decode_action(toks).reshape(-1, self.chunk_len, self.n_joints)
+
+
+def serve_episode(
+    policy: CloudPolicy,
+    task: str = "pick_place",
+    seed: int = 0,
+    dcfg: Optional[DispatcherConfig] = None,
+    max_steps: int = 400,
+    verbose: bool = True,
+):
+    """Closed loop: dispatcher decides, the real model serves chunks."""
+
+    ep = generate_episode(task, seed=seed)
+    dcfg = dcfg or DispatcherConfig(chunk_len=policy.chunk_len, action_dim=policy.n_joints)
+    state = dispatcher_init(dcfg, batch_shape=())
+    step_fn = jax.jit(lambda s, f, c: dispatcher_step(s, f, c, dcfg))
+
+    n_off = 0
+    cloud_ms = []
+    zero_chunk = jnp.zeros((dcfg.chunk_len, dcfg.action_dim), jnp.float32)
+    actions = []
+    t_len = min(max_steps, ep.q.shape[0])
+    cached_chunk = zero_chunk
+    for t in range(t_len):
+        frame = KinematicFrame(
+            q=jnp.asarray(ep.q[t]), qd=jnp.asarray(ep.qd[t]), tau=jnp.asarray(ep.tau[t])
+        )
+        # peek: would the dispatcher offload? run step with the cached chunk;
+        # if it dispatched, charge a real cloud inference for the fresh chunk
+        state, out = step_fn(state, frame, cached_chunk)
+        if bool(out.offloaded):
+            t0 = time.time()
+            fresh = policy(ep.qd[t : t + 1], ep.tau[t : t + 1])[0]
+            cloud_ms.append((time.time() - t0) * 1e3)
+            cached_chunk = jnp.asarray(fresh)
+            n_off += 1
+        actions.append(np.asarray(out.action))
+    if verbose:
+        print(
+            f"task={task} steps={t_len} offloads={n_off} "
+            f"cloud_ms(host)={np.mean(cloud_ms) if cloud_ms else 0:.1f}"
+        )
+    return {
+        "offloads": n_off,
+        "steps": t_len,
+        "actions": np.stack(actions),
+        "cloud_ms": cloud_ms,
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="openvla-7b")
+    p.add_argument("--task", default="pick_place")
+    p.add_argument("--steps", type=int, default=300)
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = EpisodeTokenizer(cfg.vocab_size)
+    policy = CloudPolicy(model, params, tok)
+    return serve_episode(policy, task=args.task, max_steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

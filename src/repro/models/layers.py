@@ -1,0 +1,171 @@
+"""Shared neural-net layers (pure JAX, functional params-as-pytrees).
+
+Every ``init_*`` returns ``(params, logical)`` where ``logical`` mirrors the
+param pytree with :class:`Axes` leaves naming each dimension's logical
+sharding axis (consumed by launch/sharding.py's divisibility-guarded mapper).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+
+
+class Axes(NamedTuple):
+    """Leaf wrapper: logical axis names for each dim of one parameter."""
+
+    names: Tuple[Optional[str], ...]
+
+
+def is_axes(x) -> bool:
+    return isinstance(x, Axes)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+
+class _AbstractFlag(threading.local):
+    active = False
+
+
+_ABSTRACT = _AbstractFlag()
+
+
+@contextlib.contextmanager
+def abstract_init():
+    """Initializers return ShapeDtypeStructs — no device allocation.
+
+    Used by the dry-run to build full-scale (hundreds-of-GB) parameter trees
+    as shape stand-ins.
+    """
+
+    prev = _ABSTRACT.active
+    _ABSTRACT.active = True
+    try:
+        yield
+    finally:
+        _ABSTRACT.active = prev
+
+
+def _normal(key, shape, dtype, stddev):
+    if _ABSTRACT.active:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, in_axis="embed", out_axis="mlp"):
+    w = _normal(key, (d_in, d_out), dtype, d_in**-0.5)
+    return {"w": w}, {"w": Axes((in_axis, out_axis))}
+
+
+def init_norm(d: int, dtype, axis: Optional[str] = None):
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": Axes((axis,))}
+
+
+def init_embedding(key, vocab: int, d: int, dtype, pad_to: int = 256):
+    vpad = -(-vocab // pad_to) * pad_to
+    table = _normal(key, (vpad, d), dtype, 1.0)
+    return {"table": table}, {"table": Axes(("vocab", "embed"))}
+
+
+# ---------------------------------------------------------------------------
+# Forward ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, params, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zeros-init scale == identity at init
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def dense(x: jax.Array, params) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+_ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_plain": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    params, logical = {}, {}
+    params["up"], logical["up"] = init_dense(ks[0], d_model, d_ff, dtype)
+    if gated:
+        params["gate"], logical["gate"] = init_dense(ks[1], d_model, d_ff, dtype)
+    p, l = init_dense(ks[2], d_ff, d_model, dtype, in_axis="mlp", out_axis="embed")
+    params["down"], logical["down"] = p, l
+    return params, logical
+
+
+def mlp(x: jax.Array, params, activation: str, gated: bool) -> jax.Array:
+    h = dense(x, params["up"])
+    if gated:
+        h = _ACT[activation](dense(x, params["gate"])) * h
+    else:
+        h = _ACT[activation](h)
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(h, params["down"])
+
+
+def embed_lookup(tokens: jax.Array, params, d_model: int, scale: bool) -> jax.Array:
+    x = params["table"].astype(jnp.bfloat16)[tokens]
+    if scale:
+        x = x * jnp.asarray(d_model**0.5, x.dtype)
+    return x
+
+
+def logits_from_embedding(
+    x: jax.Array, table: jax.Array, vocab_size: int, cap: float = 0.0
+) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    logits = softcap(logits, cap)
+    vpad = table.shape[0]
+    if vpad != vocab_size:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        mask = jnp.arange(vpad) >= vocab_size
+        logits = jnp.where(mask, neg, logits)
+    return logits
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Classic transformer sinusoidal positional encoding [seq, d]."""
+
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask=None):
+    """Mean next-token cross entropy; logits [..., V], labels int [...]."""
+
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts layer: top-k router + expert FFNs.
+
+TPU adaptation: token routing is a *dense one-hot einsum dispatch* (the
+standard TPU MoE formulation, cf. GShard/Switch in GSPMD) rather than
+gather/scatter — the MXU eats the dispatch einsums, and expert parallelism
+falls out of sharding the expert dim ("expert" -> data axis) with GSPMD
+inserting the all-to-alls.
+
+Capacity-less variant: every token's top-k experts are honored (no token
+dropping) by computing all selected expert outputs through the combine
+einsum.  Cost model: FLOPs scale with E (dispatch einsums touch every
+expert's weights), which is exactly the dry-run/roofline-visible behaviour;
+the Pallas path for real deployments would use megablox-style grouped
+matmuls — noted in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+from repro.models.layers import _ACT, Axes, _normal
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": _normal(ks[0], (d, e), jnp.float32, d**-0.5),
+        "up": _normal(ks[1], (e, d, f), dtype, d**-0.5),
+        "down": _normal(ks[3], (e, f, d), dtype, f**-0.5),
+    }
+    logical = {
+        "router": Axes(("embed", None)),
+        "up": Axes(("expert", "embed", "mlp")),
+        "down": Axes(("expert", "mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        params["gate"] = _normal(ks[2], (e, d, f), dtype, d**-0.5)
+        logical["gate"] = Axes(("expert", "embed", "mlp"))
+    return params, logical
+
+
+def router_probs(x: jax.Array, router_w: jax.Array, k: int):
+    """Returns (combine [.., E] with top-k softmax weights, aux_loss scalar)."""
+
+    logits = (x.astype(jnp.float32) @ router_w).astype(jnp.float32)  # [..,E]
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+    combine = jnp.zeros_like(probs)
+    combine = jnp.put_along_axis(combine, top_idx, top_vals, axis=-1, inplace=False)
+    # Switch-style load-balance aux loss
+    density = jnp.mean((combine > 0).astype(jnp.float32), axis=tuple(range(combine.ndim - 1)))
+    density_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = e * jnp.sum(density * density_prob) / k
+    return combine, aux
+
+
+def moe_forward(x: jax.Array, params, cfg: ModelConfig):
+    """x [B,S,D] -> ([B,S,D], aux_loss).
+
+    Baseline ("dense-compute") formulation: every expert processes every
+    token and the top-k combine weights zero out non-selected outputs —
+    numerically identical to gather/scatter dispatch, trivially correct
+    under GSPMD, but costs E/k more FLOPs than necessary.  The experts are
+    *streamed* with a lax.scan so the [B,S,E,F] intermediate never
+    materializes (memory-feasible at trillion-FLOP scale).  The
+    capacity-based top-k dispatch (`moe_forward_capacity`) is the §Perf
+    optimized path.
+    """
+
+    m = cfg.moe
+    combine, aux = router_probs(x, params["router"], m.num_experts_per_tok)
+    combine = shard(combine, "batch", "act_seq", None)
+    xe = x
+
+    @jax.checkpoint  # recompute the expert FFN in backward: per-expert
+    def one_expert(acc, inp):  # residuals would otherwise stack E-deep
+        if cfg.gated_mlp:
+            w_up, w_gate, w_down, cmb = inp
+        else:
+            w_up, w_down, cmb = inp
+            w_gate = None
+        h = xe @ w_up.astype(xe.dtype)
+        if w_gate is not None:
+            h = _ACT[cfg.mlp_activation](xe @ w_gate.astype(xe.dtype)) * h
+        else:
+            h = _ACT[cfg.mlp_activation](h)
+        h = shard(h, "batch", "act_seq", "mlp")
+        out = (h * cmb.astype(h.dtype)[..., None]) @ w_down.astype(h.dtype)
+        return acc + out, ()
+
+    cmb_e = jnp.moveaxis(combine, -1, 0)  # [E, B, S]
+    xs = (
+        (params["up"], params["gate"], params["down"], cmb_e)
+        if cfg.gated_mlp
+        else (params["up"], params["down"], cmb_e)
+    )
+    out, _ = jax.lax.scan(one_expert, jnp.zeros_like(xe), xs)
+    return out.astype(x.dtype), aux
+
+
+def moe_forward_capacity(x: jax.Array, params, cfg: ModelConfig, capacity_factor=None):
+    """Optimized top-k dispatch: gather tokens to [E, C, D], run only the
+    selected experts' FFNs (k·cf× dense FLOPs instead of E×), scatter-add
+    back.  Token overflow beyond each expert's capacity C is dropped
+    (standard GShard/Switch semantics)."""
+
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.num_experts_per_tok
+    e = m.num_experts
+    cf = capacity_factor or m.capacity_factor
+    tokens = b * s
+    cap = max(int(tokens * k * cf / e), 1)
+
+    combine, aux = router_probs(x, params["router"], k)  # [B,S,E]
+    flat_comb = combine.reshape(tokens, e)
+    xt = x.reshape(tokens, d)
+
+    # position of each token within its expert's buffer
+    selected = flat_comb > 0                                  # [T, E]
+    pos_in_e = jnp.cumsum(selected.astype(jnp.int32), axis=0) - 1
+    keep = selected & (pos_in_e < cap)
+    # one-hot dispatch [T, E, C] folded as gather indices
+    tok_ids = jnp.arange(tokens)
+    # build [E, C] token index table via scatter
+    flat_slot = pos_in_e + jnp.arange(e) * cap                # [T, E]
+    slot_of_tok = jnp.where(keep, flat_slot, e * cap)         # overflow bucket
+    table = jnp.full((e * cap + 1,), 0, jnp.int32)
+    table = table.at[slot_of_tok.reshape(-1)].set(
+        jnp.repeat(tok_ids, e)
+    )
+    valid = jnp.zeros((e * cap + 1,), bool).at[slot_of_tok.reshape(-1)].set(True)
+    idx = table[: e * cap].reshape(e, cap)
+    vmask = valid[: e * cap].reshape(e, cap)
+
+    # NOTE: remat of this dispatch+FFN chain was tried and REFUTED
+    # (+1.2 GB/device on qwen3 train — §Perf iteration A3): the recompute
+    # duplicates the gather while the saved residuals were already small.
+    xg = xt[idx] * vmask[..., None]                           # [E, C, D]
+    xg = shard(xg, "expert", None, None)
+    h = jnp.einsum("ecd,edf->ecf", xg, params["up"].astype(xg.dtype))
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", xg, params["gate"].astype(xg.dtype))
+        h = _ACT[cfg.mlp_activation](g) * h
+    else:
+        h = _ACT[cfg.mlp_activation](h)
+    h = shard(h, "expert", None, "mlp")
+    oe = jnp.einsum("ecf,efd->ecd", h, params["down"].astype(h.dtype))  # [E,C,D]
+
+    # combine weight per slot: direct 2-D gather flat_comb[token, expert]
+    # (building the [E, C, E] row-gather intermediate costs ~0.7 GB/device
+    # at 131k tokens — §Perf iteration A2)
+    w = flat_comb[idx, jnp.arange(e)[:, None]] * vmask
+    out = jnp.zeros((tokens, d), oe.dtype)
+    out = out.at[idx.reshape(-1)].add((oe * w[..., None]).reshape(e * cap, d))
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,232 @@
+"""Mamba-style selective SSM block, TPU-adapted as a chunked SSD scan.
+
+Hardware adaptation (DESIGN.md §2): Jamba's Mamba-1 selective scan is a
+per-(channel, state) diagonal recurrence — efficient on GPUs via a fused
+sequential kernel, but hostile to the TPU MXU.  We implement the block in the
+Mamba-2 / SSD formulation (scalar decay per *head*), which turns the scan
+into chunked matmuls (intra-chunk quadratic form + inter-chunk recurrence)
+that map directly onto the MXU.  The ``mamba_scan`` Pallas kernel implements
+the same chunked algorithm with explicit VMEM tiling; this module is the
+lowering-friendly jnp path and the oracle.
+
+Shapes (Mamba-2 conventions, single B/C group):
+  x  [B, S, H, P]   inner activations (H*P = expand * d_model)
+  dt [B, S, H]      softplus-positive step sizes
+  A  [H]            negative per-head decay rates
+  Bm, C [B, S, N]   input/output state projections
+State: h [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.launch.sharding import shard
+from repro.models.layers import Axes, _normal
+
+HEAD_P = 64  # SSD head dim
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    nheads = max(d_in // HEAD_P, 1)
+    return d_in, nheads, s.state_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in, nh, n = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        # x and z (gate) branches
+        "in_proj": _normal(ks[0], (d, 2 * d_in), dtype, d**-0.5),
+        # depthwise causal conv over the x branch
+        "conv_w": _normal(ks[1], (s.conv_width, d_in), dtype, 0.5),
+        # dt (per head, model-sharded) and B/C (small, replicated) heads
+        "dt_proj": _normal(ks[2], (d_in, nh), dtype, d_in**-0.5),
+        "bc_proj": _normal(ks[3], (d_in, 2 * n), dtype, d_in**-0.5),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": _normal(ks[5], (d_in, d), dtype, d_in**-0.5),
+    }
+    logical = {
+        "in_proj": Axes(("embed", "state")),
+        "conv_w": Axes(("conv", "state")),
+        "dt_proj": Axes(("state", "heads")),
+        "bc_proj": Axes(("state", None)),
+        "dt_bias": Axes(("heads",)),
+        "a_log": Axes(("heads",)),
+        "d_skip": Axes(("heads",)),
+        "out_proj": Axes(("state", "embed")),
+    }
+    return params, logical
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry=None):
+    """Depthwise causal conv.  x [B,S,C], w [K,C].  carry [B,K-1,C] or None."""
+
+    k = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_carry = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out), new_carry
+
+
+def _project_dt_bc(xb: jax.Array, params, n: int):
+    """dt [.., H] (model-sharded), Bm/C [.., N] (replicated)."""
+
+    dt = (xb @ params["dt_proj"].astype(xb.dtype)).astype(jnp.float32)
+    bc = (xb @ params["bc_proj"].astype(xb.dtype)).astype(jnp.float32)
+    return dt, bc[..., :n], bc[..., n:]
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B,S,H,P] f32
+    dt: jax.Array,  # [B,S,H] f32 (post-softplus)
+    a: jax.Array,  # [H] f32, negative
+    bm: jax.Array,  # [B,S,N] f32
+    c: jax.Array,  # [B,S,N] f32
+    chunk: int = 256,
+    h0=None,  # [B,H,P,N] initial state
+):
+    """Chunked SSD scan.  Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+
+    b, s, nh, p = x.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, nh, p)
+    dtr = dt.reshape(b, nc, chunk, nh)
+    bmr = bm.reshape(b, nc, chunk, n)
+    cr = c.reshape(b, nc, chunk, n)
+
+    loga = dtr * a  # [B,nc,L,H], <= 0
+    cum = jnp.cumsum(loga, axis=2)  # inclusive cumsum of log-decay
+
+    # ---- intra-chunk (quadratic in chunk length; MXU-friendly) ----
+    g = jnp.einsum("bctn,bcsn->bcts", cr, bmr)  # [B,nc,L,L]
+    # decay from s -> t (exclusive of s's own decay): cum[t] - cum[s]
+    m = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L,H]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: above the diagonal m > 0 can overflow, and
+    # where(mask, exp(m), 0) still back-propagates inf * 0 = NaN
+    m = jnp.exp(jnp.where(tril[None, None, :, :, None], m, -1e30))
+    w = g[..., None] * m * dtr[:, :, None, :, :]  # [B,nc,t,s,H]
+    y = jnp.einsum("bctsh,bcshp->bcthp", w, xr)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    # state contribution of chunk c: sum_s exp(cum[last]-cum[s]) * dt_s * B_s x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,L,H]
+    sc = jnp.einsum(
+        "bcsh,bcsn,bcshp->bchpn", decay_to_end * dtr, bmr, xr
+    )  # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    def step(h, inp):
+        s_c, dec = inp
+        y_state = h  # state BEFORE this chunk
+        h = h * dec[:, :, None, None] + s_c
+        return h, y_state
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), x.dtype)
+    hT, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B,nc,H,P,N] state entering chunk
+
+    # contribution of the carried state to in-chunk outputs
+    decay_from_start = jnp.exp(cum)  # [B,nc,L,H]
+    y_carry = jnp.einsum(
+        "bctn,bchpn,bcth->bcthp", cr, h_prev, decay_from_start
+    )
+    y = (y + y_carry).reshape(b, s, nh, p)
+    return y, hT
+
+
+def ssd_step(x, dt, a, bm, c, h):
+    """Single decode step.  x [B,H,P], dt [B,H], bm/c [B,N], h [B,H,P,N]."""
+
+    dec = jnp.exp(dt * a)  # [B,H]
+    h = h * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bm, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c, h)
+    return y, h
+
+
+def mamba_forward(x_res, params, cfg, state=None, impl: str = "xla"):
+    """Full-sequence mamba block.  x_res [B,S,D] -> ([B,S,D], state)."""
+
+    d_in, nh, n = ssm_dims(cfg)
+    b, s, d = x_res.shape
+    h = x_res @ params["in_proj"].astype(x_res.dtype)
+    xb, z = h[..., :d_in], h[..., d_in:]
+    xb = shard(xb, "batch", "act_seq", "state")
+    conv_carry = None if state is None else state["conv"]
+    xb, conv_carry = _causal_conv(xb, params["conv_w"], conv_carry)
+    dt, bm, c = _project_dt_bc(xb, params, n)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    dt = shard(dt, "batch", "act_seq", "heads")
+    a = -jnp.exp(params["a_log"])
+    xh = xb.astype(jnp.float32).reshape(b, s, nh, HEAD_P if d_in >= HEAD_P else d_in)
+    xh = shard(xh, "batch", "act_seq", "heads", None)
+    h0 = None if state is None else state["h"]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        y, hT = kops.mamba_scan(xh, dt, a, bm, c, h0=h0)
+    else:
+        y, hT = ssd_chunked(xh, dt, a, bm, c, h0=h0)
+    y = y + params["d_skip"][:, None] * xh
+    y = y.reshape(b, s, d_in).astype(x_res.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard(y, "batch", "act_seq", "state")
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_state = {"h": hT, "conv": conv_carry}
+    return out, new_state
+
+
+def mamba_decode_step(x_res, params, cfg, state):
+    """One-token decode.  x_res [B,1,D], state {h:[B,H,P,N], conv:[B,K-1,C]}."""
+
+    d_in, nh, n = ssm_dims(cfg)
+    b = x_res.shape[0]
+    h = x_res @ params["in_proj"].astype(x_res.dtype)
+    xb, z = h[..., :d_in], h[..., d_in:]
+    xb, conv_carry = _causal_conv(xb, params["conv_w"], state["conv"])
+    dt, bm, c = _project_dt_bc(xb[:, 0], params, n)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    p = HEAD_P if d_in >= HEAD_P else d_in
+    xh = xb.astype(jnp.float32).reshape(b, nh, p)
+    y, hT = ssd_step(xh, dt, a, bm, c, state["h"])
+    y = y + params["d_skip"][:, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x_res.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, {"h": hT, "conv": conv_carry}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm or SSMConfig()
+    d_in, nh, n = ssm_dims(cfg)
+    p = HEAD_P if d_in >= HEAD_P else d_in
+    return {
+        "h": jnp.zeros((batch, nh, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_in), dtype),
+    }

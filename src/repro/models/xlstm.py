@@ -1,0 +1,286 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential recurrence).
+
+TPU adaptation: the mLSTM parallel form is evaluated chunkwise (quadratic
+inside a chunk, recurrent across chunks) exactly like our SSD scan, so the
+inner products hit the MXU.  The sLSTM recurrence is inherently sequential
+(h_{t-1} feeds the gates) and runs as a ``lax.scan`` over time — O(1) state
+per step, which is what makes xlstm-125m eligible for the 500k decode shape.
+
+mLSTM state: C [B,H,Dh,Dh], n [B,H,Dh], m [B,H] (log-space stabilizer).
+sLSTM state: c,n,h [B,D], m [B,D].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.launch.sharding import shard
+from repro.models.layers import Axes, _normal
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm or XLSTMConfig()
+    d_in = int(x.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.num_heads
+    dh = d_in // nh
+    return d_in, nh, dh
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    params = {
+        "up_proj": _normal(ks[0], (d, 2 * d_in), dtype, d**-0.5),
+        "wq": _normal(ks[1], (d_in, d_in), dtype, d_in**-0.5),
+        "wk": _normal(ks[2], (d_in, d_in), dtype, d_in**-0.5),
+        "wv": _normal(ks[3], (d_in, d_in), dtype, d_in**-0.5),
+        "w_if": _normal(ks[4], (d_in, 2 * nh), dtype, d_in**-0.5),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((nh,), jnp.float32), 3.0 * jnp.ones((nh,), jnp.float32)]
+        ),
+        "out_proj": _normal(ks[6], (d_in, d), dtype, d_in**-0.5),
+    }
+    logical = {
+        "up_proj": Axes(("embed", "state")),
+        "wq": Axes(("state", "qkv_features")),
+        "wk": Axes(("state", "qkv_features")),
+        "wv": Axes(("state", "qkv_features")),
+        "w_if": Axes(("state", None)),
+        "if_bias": Axes((None,)),
+        "out_proj": Axes(("state", "embed")),
+    }
+    return params, logical
+
+
+def _mlstm_gates(xi: jax.Array, params, nh: int):
+    gates = (xi @ params["w_if"].astype(xi.dtype)).astype(jnp.float32)
+    gates = gates + params["if_bias"]
+    i_gate, f_gate = gates[..., :nh], gates[..., nh:]
+    # log-space: log sigmoid forget, identity (exp-able) input
+    logf = jax.nn.log_sigmoid(f_gate)
+    return i_gate, logf
+
+
+def mlstm_chunked(q, k, v, i_gate, logf, chunk: int = 256, state=None):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v [B,S,H,Dh] f32; i_gate/logf [B,S,H] f32.
+    Returns (y [B,S,H,Dh], state (C,n,m)).
+    """
+
+    b, s, nh, dh = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    qr = q.reshape(b, nc, chunk, nh, dh) * (dh**-0.5)
+    kr = k.reshape(b, nc, chunk, nh, dh)
+    vr = v.reshape(b, nc, chunk, nh, dh)
+    ir = i_gate.reshape(b, nc, chunk, nh)
+    fr = logf.reshape(b, nc, chunk, nh)
+
+    cumf = jnp.cumsum(fr, axis=2)  # inclusive
+    # log weight of source s seen at target t (within chunk):
+    #   D[t,s] = cumf[t] - cumf[s] + i[s]   for s <= t
+    logd = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + ir[:, :, None, :, :]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    logd = jnp.where(tril[None, None, :, :, None], logd, -jnp.inf)
+    # carried-state log weight at t: cumf[t] + m_prev
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def scan_chunk(carry, inp):
+        c_in, n_in, m_in = carry
+        qc, kc, vc, ic, fc, logd_c, cumf_c = inp  # [B,L,H,*]
+        # stabilizer: max over in-chunk weights and carry weight, per target t
+        m_intra = jnp.max(logd_c, axis=2)  # [B,L,H] (max over s)
+        m_carry = cumf_c + m_in[:, None, :]  # [B,L,H]
+        m_t = jnp.maximum(m_intra, m_carry)
+        m_t = jnp.maximum(m_t, -1e30)  # avoid -inf - -inf
+        w_intra = jnp.exp(logd_c - m_t[:, :, None, :])  # [B,t,s,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * w_intra
+        y_num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        y_den = jnp.sum(scores, axis=2)  # [B,t,H]... sum over s of scores
+        w_carry = jnp.exp(m_carry - m_t)  # [B,L,H]
+        y_num = y_num + jnp.einsum(
+            "bthd,bhde,bth->bthe", qc, c_in, w_carry
+        )
+        y_den = y_den + jnp.einsum("bthd,bhd,bth->bth", qc, n_in, w_carry)
+        y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)[..., None]
+
+        # ---- state update to end of chunk ----
+        f_total = cumf_c[:, -1]  # [B,H]
+        m_out = jnp.maximum(f_total + m_in, jnp.max(cumf_c[:, -1:, :] - cumf_c + ic, axis=1))
+        w_state = jnp.exp(f_total[:, None] - cumf_c + ic - m_out[:, None])  # [B,L,H]
+        c_out = c_in * jnp.exp(f_total + m_in - m_out)[:, :, None, None] + jnp.einsum(
+            "blh,blhd,blhe->bhde", w_state, kc, vc
+        )
+        n_out = n_in * jnp.exp(f_total + m_in - m_out)[:, :, None] + jnp.einsum(
+            "blh,blhd->bhd", w_state, kc
+        )
+        return (c_out, n_out, m_out), y
+
+    xs = (
+        jnp.moveaxis(qr, 1, 0),
+        jnp.moveaxis(kr, 1, 0),
+        jnp.moveaxis(vr, 1, 0),
+        jnp.moveaxis(ir, 1, 0),
+        jnp.moveaxis(fr, 1, 0),
+        jnp.moveaxis(logd, 1, 0),
+        jnp.moveaxis(cumf, 1, 0),
+    )
+    (cT, nT, mT), ys = jax.lax.scan(scan_chunk, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, dh)
+    return y, (cT, nT, mT)
+
+
+def mlstm_step(q, k, v, i_gate, logf, state):
+    """One-token mLSTM update.  q,k,v [B,H,Dh]; i/logf [B,H]."""
+
+    c, n, m = state
+    dh = q.shape[-1]
+    m_new = jnp.maximum(logf + m, i_gate)
+    w_prev = jnp.exp(logf + m - m_new)
+    w_in = jnp.exp(i_gate - m_new)
+    c = c * w_prev[:, :, None, None] + jnp.einsum("bhd,bhe->bhde", k, v) * w_in[:, :, None, None]
+    n = n * w_prev[:, :, None] + k * w_in[:, :, None]
+    q = q * (dh**-0.5)
+    y_num = jnp.einsum("bhd,bhde->bhe", q, c)
+    y_den = jnp.einsum("bhd,bhd->bh", q, n)
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)[..., None]
+    return y, (c, n, m_new)
+
+
+def mlstm_forward(x_res, params, cfg, state=None, step: bool = False):
+    d_in, nh, dh = mlstm_dims(cfg)
+    b = x_res.shape[0]
+    h = x_res @ params["up_proj"].astype(x_res.dtype)
+    xi, z = h[..., :d_in], h[..., d_in:]
+    xi = shard(xi, "batch", "act_seq", "state")
+    q = (xi @ params["wq"].astype(xi.dtype)).astype(jnp.float32)
+    k = (xi @ params["wk"].astype(xi.dtype)).astype(jnp.float32)
+    v = (xi @ params["wv"].astype(xi.dtype)).astype(jnp.float32)
+    i_gate, logf = _mlstm_gates(xi, params, nh)
+    if step:
+        s = 1
+        y, new_state = mlstm_step(
+            q.reshape(b, nh, dh),
+            k.reshape(b, nh, dh),
+            v.reshape(b, nh, dh),
+            i_gate[:, 0],
+            logf[:, 0],
+            state,
+        )
+        y = y.reshape(b, 1, d_in)
+    else:
+        s = x_res.shape[1]
+        y, new_state = mlstm_chunked(
+            q.reshape(b, s, nh, dh),
+            k.reshape(b, s, nh, dh),
+            v.reshape(b, s, nh, dh),
+            i_gate,
+            logf,
+            state=state,
+        )
+        y = y.reshape(b, s, d_in)
+    y = y.astype(x_res.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x_res.dtype), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_in, nh, dh = mlstm_dims(cfg)
+    return (
+        jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        jnp.zeros((batch, nh, dh), jnp.float32),
+        jnp.full((batch, nh), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    x = cfg.xlstm or XLSTMConfig()
+    d_up = int(x.proj_factor_slstm * d)
+    ks = jax.random.split(key, 4)
+    params = {
+        # input weights for 4 gates (i, f, z, o), recurrent weights likewise
+        "w_in": _normal(ks[0], (d, 4 * d), dtype, d**-0.5),
+        "w_rec": _normal(ks[1], (d, 4 * d), dtype, d**-0.5),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "up": _normal(ks[2], (d, 2 * d_up), dtype, d**-0.5),
+        "down": _normal(ks[3], (d_up, d), dtype, d_up**-0.5),
+    }
+    logical = {
+        "w_in": Axes(("embed", "state")),
+        "w_rec": Axes(("embed", "state")),
+        "bias": Axes((None,)),
+        "up": Axes(("embed", "mlp")),
+        "down": Axes(("mlp", "embed")),
+    }
+    return params, logical
+
+
+def _slstm_cell(params, d: int, carry, x_t):
+    """x_t [B,D] f32; carry (c, n, h, m)."""
+
+    c, n, h, m = carry
+    pre = x_t @ params["w_in"].astype(x_t.dtype) + h @ params["w_rec"].astype(h.dtype)
+    pre = pre.astype(jnp.float32) + params["bias"]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_st = jnp.exp(i_raw - m_new)
+    f_st = jnp.exp(logf + m - m_new)
+    z_t = jnp.tanh(z_raw)
+    o_t = jax.nn.sigmoid(o_raw)
+    c_new = f_st * c + i_st * z_t
+    n_new = f_st * n + i_st
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(x_res, params, cfg, state=None, step: bool = False):
+    d = cfg.d_model
+    b = x_res.shape[0]
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+    xf = x_res.astype(jnp.float32)
+    if step:
+        new_state = _slstm_cell(params, d, state, xf[:, 0])
+        h_seq = new_state[2][:, None]
+    else:
+        def scan_fn(carry, x_t):
+            carry = _slstm_cell(params, d, carry, x_t)
+            return carry, carry[2]
+
+        new_state, h_seq = jax.lax.scan(scan_fn, state, jnp.moveaxis(xf, 1, 0))
+        h_seq = jnp.moveaxis(h_seq, 0, 1)
+    h_seq = h_seq.astype(x_res.dtype)
+    up = h_seq @ params["up"].astype(x_res.dtype)
+    d_up = params["down"].shape[0]
+    gate, val = up[..., :d_up], up[..., d_up:]
+    out = (jax.nn.gelu(gate) * val) @ params["down"].astype(x_res.dtype)
+    return out, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))

@@ -1,0 +1,120 @@
+"""Synthetic rigid-body manipulator dynamics (paper Eq. 3 proxy).
+
+τ = M(q)·q̈ + C(q, q̇)·q̇ + G(q) + τ_ext
+
+We use a diagonal-dominant configuration-dependent inertia, a velocity-
+product Coriolis proxy, and a gravity term from link masses — enough physics
+that joint torque carries real information about contact events (τ_ext),
+which is precisely the redundancy surrogate RAPID exploits.  LIBERO / real
+hardware are unavailable offline; DESIGN.md §2 records this substitution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ArmModel:
+    n_joints: int = 7
+    # base inertia per joint (kg m^2), decreasing toward the wrist
+    inertia_base: Tuple[float, ...] = (2.5, 2.2, 1.6, 1.2, 0.5, 0.3, 0.15)
+    coriolis_coeff: float = 0.12
+    gravity_coeff: Tuple[float, ...] = (12.0, 18.0, 9.0, 6.5, 1.8, 0.9, 0.3)
+    viscous_friction: float = 0.35
+
+
+def mass_matrix_diag(arm: ArmModel, q: jax.Array) -> jax.Array:
+    """Diagonal of M(q): base inertia modulated by elbow/shoulder pose."""
+
+    base = jnp.asarray(arm.inertia_base, jnp.float32)
+    # extended arm (cos near 1) increases effective inertia of shoulder joints
+    posture = 1.0 + 0.25 * jnp.cos(q) * jnp.linspace(1.0, 0.1, arm.n_joints)
+    return base * posture
+
+
+def coriolis(arm: ArmModel, q: jax.Array, qd: jax.Array) -> jax.Array:
+    """C(q, q̇)·q̇ proxy: velocity products coupling neighbouring joints."""
+
+    qd_shift = jnp.roll(qd, 1, axis=-1)
+    return arm.coriolis_coeff * qd * qd_shift * jnp.cos(q)
+
+
+def gravity(arm: ArmModel, q: jax.Array) -> jax.Array:
+    """G(q): link-mass moments through the kinematic chain."""
+
+    g = jnp.asarray(arm.gravity_coeff, jnp.float32)
+    return g * jnp.sin(q)
+
+
+def inverse_dynamics(
+    arm: ArmModel,
+    q: jax.Array,
+    qd: jax.Array,
+    qdd: jax.Array,
+    tau_ext: jax.Array,
+) -> jax.Array:
+    """Eq. 3: full joint torque for a trajectory sample."""
+
+    m = mass_matrix_diag(arm, q)
+    return (
+        m * qdd
+        + coriolis(arm, q, qd)
+        + gravity(arm, q)
+        + arm.viscous_friction * qd
+        + tau_ext
+    )
+
+
+def min_jerk(t: jax.Array) -> jax.Array:
+    """Minimum-jerk scalar profile s(t) on t ∈ [0, 1] (smooth approach)."""
+
+    return 10.0 * t**3 - 15.0 * t**4 + 6.0 * t**5
+
+
+def min_jerk_segment(q0: jax.Array, q1: jax.Array, steps: int, dt: float):
+    """Joint trajectory q(t), q̇(t), q̈(t) between two waypoints."""
+
+    t = jnp.linspace(0.0, 1.0, steps)
+    s = min_jerk(t)
+    # analytic derivatives of the min-jerk polynomial
+    sd = (30.0 * t**2 - 60.0 * t**3 + 30.0 * t**4) / (steps * dt)
+    sdd = (60.0 * t - 180.0 * t**2 + 120.0 * t**3) / (steps * dt) ** 2
+    dq = (q1 - q0)[None, :]
+    q = q0[None, :] + s[:, None] * dq
+    qd = sd[:, None] * dq
+    qdd = sdd[:, None] * dq
+    return q, qd, qdd
+
+
+def trapezoid_segment(q0: jax.Array, q1: jax.Array, steps: int, dt: float,
+                      blend_frac: float = 0.15):
+    """Trapezoidal-velocity point-to-point move (industrial PTP profile).
+
+    Short min-jerk-smoothed blends at both ends, constant velocity cruise in
+    between: q̈ ≈ 0 for most of the segment — the near-zero-variance
+    "approach phase" kinematics the paper's Fig. 2 relies on.  The blend
+    regions coincide with segment boundaries (task-switch replanning points),
+    which is where the compatibility trigger is *supposed* to fire.
+    """
+
+    t = jnp.linspace(0.0, 1.0, steps)
+    tb = blend_frac
+    # smoothstep blends give C1-continuous velocity
+    up = jnp.clip(t / tb, 0.0, 1.0)
+    down = jnp.clip((1.0 - t) / tb, 0.0, 1.0)
+    vprof = (3 * up**2 - 2 * up**3) * (3 * down**2 - 2 * down**3)
+    # normalize so displacement integrates to 1
+    s_raw = jnp.cumsum(vprof)
+    s = s_raw / s_raw[-1]
+    sd = vprof / (s_raw[-1] * dt)
+    sdd = jnp.gradient(sd) / dt
+    dq = (q1 - q0)[None, :]
+    q = q0[None, :] + s[:, None] * dq
+    qd = sd[:, None] * dq
+    qdd = sdd[:, None] * dq
+    return q, qd, qdd

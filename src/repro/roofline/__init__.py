@@ -1,0 +1,13 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)
+
+__all__ = [
+    "HW_V5E",
+    "RooflineTerms",
+    "collective_bytes_from_hlo",
+    "roofline_from_compiled",
+]

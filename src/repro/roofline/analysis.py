@@ -1,0 +1,170 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes by
+parsing the optimized HLO text (``compiled.as_text()``) and summing the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Collectives inside while-loop bodies (the scan over layer repeats) appear
+once in the text but execute ``trip`` times; callers pass the known scan
+trip count (= model.repeats) and we scale in-loop collectives accordingly.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float      # bf16
+    hbm_bw: float          # bytes/s
+    ici_bw: float          # bytes/s per link
+
+
+HW_V5E = HwSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[16,4096,3584]' or a
+    tuple '(f32[8,128], f32[8,128])'."""
+
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OP_RE = re.compile(
+    r"%?[\w\.\-]+\s*=\s*"                       # result name
+    r"((?:\([^=]*?\)|[\w\[\],]+)(?:\{[\d,]*\})?)"  # shape (+ optional layout)
+    r"\s+([\w\-]+)\("                           # op name
+)
+_HDR_RE = re.compile(r"^\s*%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def collective_bytes_from_hlo(hlo_text: str, loop_trip: int = 1) -> Dict[str, float]:
+    """Sum collective result bytes, scaling in-loop ops by ``loop_trip``.
+
+    Pass 1 collects the computations referenced as ``body=`` by while ops
+    (lax.scan over layer repeats); pass 2 accumulates collective result
+    bytes per computation, scaling those inside while bodies by the known
+    scan trip count.
+    """
+
+    lines = hlo_text.splitlines()
+    body_comps = set()
+    for line in lines:
+        if " while(" in line:
+            m = _BODY_RE.search(line)
+            if m:
+                body_comps.add(m.group(1))
+
+    per_op: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    current_comp = ""
+    for line in lines:
+        header = _HDR_RE.match(line)
+        if header:
+            current_comp = header.group(1)
+            continue
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        op = m.group(2)
+        matched = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start" or op.startswith(c + "."):
+                matched = c
+                break
+        if matched is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        in_loop = current_comp in body_comps or "while" in current_comp or "body" in current_comp
+        per_op[matched] += float(nbytes) * (loop_trip if in_loop else 1)
+    per_op["total"] = sum(v for k, v in per_op.items() if k in _COLLECTIVES)
+    return per_op
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float          # whole-program FLOPs (all chips)
+    hlo_gbytes: float
+    collective_gbytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_gflops: float        # 6*N*D useful flops
+    useful_ratio: float
+    bottleneck: str
+    mem_per_device_gb: float
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+def roofline_from_compiled(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    model_flops: float,
+    mem_per_device_bytes: float,
+    hw: HwSpec = HW_V5E,
+) -> RooflineTerms:
+    compute_s = flops / (chips * hw.peak_flops)
+    memory_s = bytes_accessed / (chips * hw.hbm_bw)
+    collective_s = collective_bytes / (chips * hw.ici_bw)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_gflops=flops / 1e9,
+        hlo_gbytes=bytes_accessed / 1e9,
+        collective_gbytes=collective_bytes / 1e9,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_gflops=model_flops / 1e9,
+        useful_ratio=model_flops / flops if flops else 0.0,
+        bottleneck=bottleneck,
+        mem_per_device_gb=mem_per_device_bytes / 1e9,
+    )

@@ -1,0 +1,33 @@
+"""Edge-cloud network channel model.
+
+Latency of a cloud query = uplink (observation payload) + downlink (action
+chunk) + fixed RTT.  Payloads follow the OpenVLA serving setup: one RGB
+observation (JPEG ~ 80 KB) + instruction tokens up; a k-step action chunk
+(k x 7 float32) down.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    rtt_ms: float = 8.0
+    uplink_mbps: float = 200.0     # edge -> cloud
+    downlink_mbps: float = 400.0
+    obs_bytes: int = 80_000        # compressed 224x224 RGB + tokens
+    per_action_bytes: int = 28     # 7 x float32
+    jitter_ms: float = 1.5
+
+
+def query_latency_ms(cfg: ChannelConfig, chunk_len: int) -> float:
+    """Deterministic mean latency of one offload round-trip."""
+
+    up = cfg.obs_bytes * 8.0 / (cfg.uplink_mbps * 1e6) * 1e3
+    down = chunk_len * cfg.per_action_bytes * 8.0 / (cfg.downlink_mbps * 1e6) * 1e3
+    return cfg.rtt_ms + up + down
+
+
+def bandwidth_bytes_per_episode(cfg: ChannelConfig, n_offloads: int, chunk_len: int) -> int:
+    return n_offloads * (cfg.obs_bytes + chunk_len * cfg.per_action_bytes)

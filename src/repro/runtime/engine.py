@@ -1,0 +1,301 @@
+"""Edge-cloud co-inference engine: strategy simulation + accounting.
+
+Couples (a) trigger policies — RAPID's kinematic dual-threshold, the
+vision-based entropy baseline, static/edge-only/cloud-only — with (b) the
+action-chunk queue semantics of Algorithm 1 and (c) the calibrated latency
+model, over the synthetic episode suite.
+
+The RAPID trigger stream comes from the *real* jitted `core.trigger` scan
+(the deployable artifact); all strategies then share one queue/accounting
+simulator so comparisons are apples-to-apples.
+
+Accuracy model: executed action error vs the reference trajectory.
+  * cloud chunks are exact at fill time and accumulate *staleness* error
+    only while the robot is in a critical (contact) phase — the step-wise
+    redundancy asymmetry the paper exploits;
+  * edge-policy chunks carry the small model's noise (worse in contact);
+  * mid-chunk preemptions add a continuity (jerk) penalty.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import EntropyTriggerConfig
+from repro.core.kinematics import KinematicFrame
+from repro.core.trigger import TriggerConfig, run_trigger
+from repro.robotics.episodes import (
+    Episode,
+    edge_policy_chunks,
+    generate_episode,
+    reference_chunks,
+)
+from repro.robotics.noise import entropy_stream
+from repro.runtime.latency import (
+    PROFILES,
+    HardwareModel,
+    LatencyReport,
+    SimCounters,
+    evaluate,
+)
+
+STRATEGIES = (
+    "rapid", "vision", "edge_only", "cloud_only", "rapid_no_comp", "rapid_no_red",
+)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    chunk_len: int = 8
+    staleness_alpha: float = 0.04   # error growth per stale step in contact
+    preempt_jerk: float = 0.5       # continuity penalty per mid-chunk preempt
+    success_tol: float = 0.30       # per-step error budget
+    trigger: TriggerConfig = TriggerConfig()
+    entropy: EntropyTriggerConfig = EntropyTriggerConfig()
+
+
+@dataclass(frozen=True)
+class EpisodeResult:
+    counters: SimCounters
+    accuracy: float            # fraction of critical steps within tolerance
+    mean_error: float
+    offload_steps: np.ndarray  # bool [T]
+
+
+# ---------------------------------------------------------------------------
+# trigger streams
+# ---------------------------------------------------------------------------
+
+
+def rapid_trigger_stream(
+    ep: Episode, cfg: TriggerConfig
+) -> np.ndarray:
+    """Dispatch booleans from the real jitted RAPID monitor."""
+
+    frames = KinematicFrame(
+        q=jnp.asarray(ep.q)[:, None],
+        qd=jnp.asarray(ep.qd)[:, None],
+        tau=jnp.asarray(ep.tau)[:, None],
+    )
+    _, out = jax.jit(lambda f: run_trigger(cfg, f))(frames)
+    return np.asarray(out.dispatch[:, 0])
+
+
+def entropy_trigger_stream(
+    ep: Episode, regime: str, cfg: EntropyTriggerConfig, seed: int
+) -> np.ndarray:
+    h = entropy_stream(ep, regime, seed)
+    trig = h > cfg.threshold
+    # apply the same cooldown masking discipline
+    out = np.zeros_like(trig)
+    c = 0
+    for t in range(trig.shape[0]):
+        if trig[t] and c == 0:
+            out[t] = True
+            c = cfg.cooldown_steps
+        else:
+            c = max(c - 1, 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# unified queue/accounting simulation
+# ---------------------------------------------------------------------------
+
+
+def simulate_queue(
+    ep: Episode,
+    dispatch: np.ndarray,            # [T] cloud-offload decisions
+    cfg: EngineConfig,
+    edge_refill_allowed: bool,       # False => queue depletion queries cloud
+    edge_chunks: Optional[np.ndarray],
+    edge_exact: bool = False,        # edge_only: full model resident
+) -> EpisodeResult:
+    t_len = ep.critical.shape[0]
+    k = cfg.chunk_len
+    ref = ep.ref_actions
+    cloud = reference_chunks(ep, k)
+
+    head = k  # empty
+    fill_time = -1
+    fill_src = "none"
+    err = np.zeros(t_len, np.float32)
+    n_off = n_edge = n_intr = 0
+    offload_steps = np.zeros(t_len, bool)
+    preempt_steps = np.zeros(t_len, bool)
+    # purposive-preemption windows (identical to the spurious accounting
+    # below): imminent contact within the deceleration blend, phase
+    # boundaries, and final deceleration to rest
+    look_p = 40
+    crit_soon_p = np.convolve(
+        ep.critical.astype(np.float32), np.ones(look_p), mode="full"
+    )[look_p - 1 : look_p - 1 + t_len] > 0
+    bound_p = np.zeros(t_len, bool)
+    for c0 in (np.flatnonzero(np.diff(ep.phase_id) != 0) + 1):
+        bound_p[max(c0 - look_p, 0) : c0 + look_p] = True
+    bound_p[-look_p:] = True
+    purposive = crit_soon_p | bound_p
+
+    for t in range(t_len):
+        refill_cloud = bool(dispatch[t])
+        refill_edge = False
+        if head >= k and not refill_cloud:
+            if edge_refill_allowed:
+                refill_edge = True
+            else:
+                refill_cloud = True
+        if refill_cloud:
+            if 0 < head < k:
+                n_intr += 1
+                preempt_steps[t] = True
+                err[t] += cfg.preempt_jerk
+                if not purposive[t]:
+                    # spurious mid-motion interruption: the manipulator takes
+                    # a few ticks to recover continuity (paper §III-A: noise
+                    # triggers "disrupt the physical continuity of motion")
+                    hi = min(t + 4, t_len)
+                    err[t:hi] += cfg.preempt_jerk * 0.8
+            head = 0
+            fill_time, fill_src = t, "cloud"
+            n_off += 1
+            offload_steps[t] = True
+        elif refill_edge:
+            head = 0
+            fill_time, fill_src = t, "edge"
+            n_edge += 1
+
+        idx = min(head, k - 1)
+        if fill_src == "cloud":
+            a = cloud[fill_time, idx]
+            # staleness only hurts during contact-rich (critical) phases
+            err[t] += cfg.staleness_alpha * (t - fill_time) * float(ep.critical[t])
+        elif fill_src == "edge":
+            if edge_exact:
+                a = cloud[fill_time, idx]
+            else:
+                a = edge_chunks[fill_time, idx]
+                err[t] += cfg.staleness_alpha * (t - fill_time) * float(ep.critical[t])
+        else:  # nothing cached yet
+            a = np.zeros_like(ref[t])
+        err[t] += float(np.linalg.norm(a - ref[t]) / max(np.linalg.norm(ref[t]), 0.2))
+        head = min(head + 1, k)
+
+    crit = ep.critical
+    # execution accuracy: fraction of steps tracked within tolerance
+    # (redundant steps are easy; critical steps dominate the differences)
+    accuracy = float((err < cfg.success_tol).mean())
+    # spurious offloads: *mid-chunk preemptions* issued in a redundant phase.
+    # Useful trigger zones: imminent contact (lookahead) and phase boundaries
+    # (task switches / replanning — exactly what θ_comp is designed to catch).
+    # lookahead covers the pre-contact deceleration blend: slowing down on
+    # approach to the object is a legitimate reason to refresh the chunk
+    look = 40
+    crit_soon = np.convolve(crit.astype(np.float32), np.ones(look), mode="full")[
+        look - 1 : look - 1 + t_len
+    ] > 0
+    boundary = np.zeros(t_len, bool)
+    change = np.flatnonzero(np.diff(ep.phase_id) != 0) + 1
+    for c0 in change:
+        boundary[max(c0 - look, 0) : c0 + look] = True
+    boundary[-look:] = True  # final deceleration to rest (task completion)
+    legit = crit_soon | boundary
+    n_spur = int((offload_steps & preempt_steps & ~legit).sum())
+    counters = SimCounters(
+        n_steps=t_len,
+        n_chunks=max(t_len // k, 1),
+        n_offloads=n_off,
+        n_edge_infer=n_edge,
+        n_interruptions=n_intr,
+        n_spurious=n_spur,
+    )
+    return EpisodeResult(
+        counters=counters,
+        accuracy=accuracy,
+        mean_error=float(err.mean()),
+        offload_steps=offload_steps,
+    )
+
+
+# ---------------------------------------------------------------------------
+# strategy runner
+# ---------------------------------------------------------------------------
+
+
+def run_strategy(
+    strategy: str,
+    ep: Episode,
+    regime: str = "standard",
+    cfg: EngineConfig = EngineConfig(),
+    seed: int = 0,
+) -> EpisodeResult:
+    t_len = ep.critical.shape[0]
+    edge_chunks = edge_policy_chunks(ep, cfg.chunk_len, seed)
+
+    if strategy == "edge_only":
+        dispatch = np.zeros(t_len, bool)
+        return simulate_queue(ep, dispatch, cfg, True, edge_chunks, edge_exact=True)
+    if strategy == "cloud_only":
+        dispatch = np.zeros(t_len, bool)
+        return simulate_queue(ep, dispatch, cfg, False, None)
+    if strategy == "vision":
+        dispatch = entropy_trigger_stream(ep, regime, cfg.entropy, seed)
+        return simulate_queue(ep, dispatch, cfg, True, edge_chunks)
+    if strategy in ("rapid", "rapid_no_comp", "rapid_no_red"):
+        tcfg = cfg.trigger
+        if strategy == "rapid_no_comp":
+            tcfg = type(tcfg)(**{**tcfg.__dict__, "theta_comp": 1e9})
+        if strategy == "rapid_no_red":
+            tcfg = type(tcfg)(**{**tcfg.__dict__, "theta_red": 1e9})
+        dispatch = rapid_trigger_stream(ep, tcfg)
+        return simulate_queue(ep, dispatch, cfg, True, edge_chunks)
+    raise ValueError(strategy)
+
+
+def episode_suite(seeds=(0, 1, 2), tasks=("pick_place", "drawer_open", "peg_insertion")):
+    return [generate_episode(t, seed=s) for t in tasks for s in seeds]
+
+
+def evaluate_strategy(
+    strategy: str,
+    regime: str = "standard",
+    cfg: EngineConfig = EngineConfig(),
+    hw: Optional[HardwareModel] = None,
+    seeds=(0, 1, 2),
+) -> Dict:
+    """Aggregate a strategy over the task suite -> paper-table row."""
+
+    hw = hw or HardwareModel.calibrated(chunk_len=cfg.chunk_len)
+    prof = PROFILES[strategy if strategy != "vision" else "vision"]
+    results = []
+    for i, ep in enumerate(episode_suite(seeds=seeds)):
+        results.append(run_strategy(strategy, ep, regime, cfg, seed=seeds[i % len(seeds)]))
+
+    # pooled counters
+    tot = SimCounters(
+        n_steps=sum(r.counters.n_steps for r in results),
+        n_chunks=sum(r.counters.n_chunks for r in results),
+        n_offloads=sum(r.counters.n_offloads for r in results),
+        n_edge_infer=sum(r.counters.n_edge_infer for r in results),
+        n_interruptions=sum(r.counters.n_interruptions for r in results),
+        n_spurious=sum(r.counters.n_spurious for r in results),
+    )
+    rep = evaluate(hw, prof, tot)
+    per_ep_tot = [
+        evaluate(hw, prof, r.counters).total_ms for r in results
+    ]
+    return {
+        "strategy": strategy,
+        "regime": regime,
+        "report": rep,
+        "total_ms": rep.total_ms,
+        "total_ms_std": float(np.std(per_ep_tot)),
+        "accuracy": float(np.mean([r.accuracy for r in results])),
+        "mean_error": float(np.mean([r.mean_error for r in results])),
+        "offload_fraction": rep.offload_fraction,
+        "interruptions_per_chunk": rep.interruptions_per_chunk,
+    }

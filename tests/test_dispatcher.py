@@ -1,0 +1,113 @@
+"""Algorithm-1 dispatcher tests: queue semantics, preemption, edge refills."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatcher import (
+    DispatcherConfig,
+    dispatcher_init,
+    dispatcher_step,
+    run_episode,
+)
+from repro.core.kinematics import KinematicFrame
+from repro.core.trigger import TriggerConfig
+
+
+def _frames(t_len, n=7, seed=0, spike_at=None):
+    rng = np.random.default_rng(seed)
+    qd = np.ones((t_len, n), np.float32) * 0.3
+    tau = rng.normal(0, 0.02, (t_len, n)).astype(np.float32)
+    if spike_at is not None:
+        tau[spike_at : spike_at + 10] += 6.0
+    q = np.cumsum(qd, 0) * 0.002
+    return KinematicFrame(jnp.asarray(q), jnp.asarray(qd), jnp.asarray(tau))
+
+
+def _chunks(t_len, k, a, val=1.0):
+    # chunk served at t encodes t so staleness is observable
+    base = jnp.arange(t_len, dtype=jnp.float32)[:, None, None]
+    return jnp.broadcast_to(base, (t_len, k, a)) * val
+
+
+def test_queue_pop_order_and_refill():
+    """Without triggers, the queue refills every k steps (from cloud when no
+    edge policy is provided — Algorithm 1 line 6 literal mode)."""
+
+    cfg = DispatcherConfig(trigger=TriggerConfig(n_joints=2), chunk_len=4, action_dim=2)
+    t_len = 32
+    frames = _frames(t_len, 2)
+    chunks = _chunks(t_len, 4, 2)
+    _, out = run_episode(cfg, frames, chunks)
+    off = np.asarray(out.offloaded)
+    assert off.sum() == t_len // 4
+    assert off[::4].all()  # refills exactly at chunk boundaries
+    # executed action at t comes from the chunk fetched at floor(t/4)*4
+    acts = np.asarray(out.action[:, 0])
+    expect = (np.arange(t_len) // 4) * 4
+    np.testing.assert_allclose(acts, expect)
+
+
+def test_edge_refill_used_when_no_trigger():
+    cfg = DispatcherConfig(trigger=TriggerConfig(n_joints=2), chunk_len=4, action_dim=2)
+    t_len = 24
+    frames = _frames(t_len, 2)
+    cloud = _chunks(t_len, 4, 2, val=1.0)
+    edge = _chunks(t_len, 4, 2, val=-1.0)
+    _, out = run_episode(cfg, frames, cloud, edge_chunks=edge)
+    assert int(np.asarray(out.offloaded).sum()) == 0
+    assert np.asarray(out.edge_refill).sum() == t_len // 4
+    # all actions must come from the edge chunks (negative values)
+    assert (np.asarray(out.action) <= 0).all()
+
+
+def test_preemption_on_trigger_overwrites_queue():
+    tcfg = TriggerConfig(n_joints=2, warmup=8, cooldown_steps=4)
+    cfg = DispatcherConfig(trigger=tcfg, chunk_len=8, action_dim=2)
+    t_len = 200
+    frames = _frames(t_len, 2, spike_at=100)
+    cloud = _chunks(t_len, 8, 2, val=1.0)
+    edge = _chunks(t_len, 8, 2, val=-1.0)
+    _, out = run_episode(cfg, frames, cloud, edge_chunks=edge)
+    off = np.asarray(out.offloaded)
+    assert off[100:112].any(), "spike must dispatch to cloud"
+    t0 = np.flatnonzero(off)[0]
+    # the action right at the preemption step comes from the fresh cloud chunk
+    assert float(out.action[t0, 0]) == float(t0)
+
+
+@given(st.integers(1, 12), st.integers(0, 6))
+@settings(max_examples=20, deadline=None)
+def test_queue_head_invariant(k, n_steps_extra):
+    """Property: queue head is always in [1, k] after a step (post-pop), and
+    actions always come from a chunk fetched at most k-1 steps ago when no
+    triggers fire."""
+
+    cfg = DispatcherConfig(trigger=TriggerConfig(n_joints=1), chunk_len=k, action_dim=1)
+    t_len = 2 * k + n_steps_extra
+    frames = _frames(t_len, 1)
+    chunks = _chunks(t_len, k, 1)
+    state = dispatcher_init(cfg)
+    for t in range(t_len):
+        f = KinematicFrame(frames.q[t], frames.qd[t], frames.tau[t])
+        state, out = dispatcher_step(state, f, chunks[t], cfg)
+        head = int(state.queue.head)
+        assert 1 <= head <= k
+        age = t - float(out.action[0])
+        assert 0 <= age < k
+
+
+def test_fleet_batched_dispatch():
+    cfg = DispatcherConfig(trigger=TriggerConfig(n_joints=3), chunk_len=4, action_dim=3)
+    t_len, fleet = 40, 5
+    f = _frames(t_len, 3)
+    frames = KinematicFrame(
+        q=jnp.repeat(f.q[:, None], fleet, 1),
+        qd=jnp.repeat(f.qd[:, None], fleet, 1),
+        tau=jnp.repeat(f.tau[:, None], fleet, 1),
+    )
+    chunks = jnp.zeros((t_len, fleet, 4, 3))
+    state, out = jax.jit(lambda fr, c: run_episode(cfg, fr, c))(frames, chunks)
+    assert out.action.shape == (t_len, fleet, 3)
+    assert out.offloaded.shape == (t_len, fleet)

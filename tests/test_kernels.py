@@ -1,0 +1,171 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rolling_stats import rolling_stats
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # b, s, h, kv, d, causal, window, cap, dtype
+    (2, 256, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (1, 512, 8, 8, 128, True, 128, 50.0, jnp.float32),
+    (2, 256, 4, 1, 64, False, 0, 0.0, jnp.float32),
+    (1, 256, 6, 3, 32, True, 64, 0.0, jnp.float32),
+    (1, 256, 4, 4, 64, True, 0, 30.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,causal,window,cap,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(b, s, h, kv, d, causal, window, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, logit_cap=cap,
+        blk_q=128, blk_k=128, interpret=True,
+    )
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window, logit_cap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 1024, 8, 2, 64, 700, 0, 0.0),
+    (1, 2048, 4, 4, 128, 2048, 512, 30.0),
+    (3, 512, 16, 1, 64, 100, 0, 0.0),
+    (1, 512, 8, 8, 32, 1, 0, 0.0),     # single-token cache
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,clen,window,cap", DECODE_CASES)
+def test_decode_attention_matches_ref(b, s, h, kv, d, clen, window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    ck = jax.random.normal(ks[1], (b, s, kv, d))
+    cv = jax.random.normal(ks[2], (b, s, kv, d))
+    out = decode_attention(
+        q, ck, cv, cache_len=clen, window=window, logit_cap=cap,
+        blk_s=256, interpret=True,
+    )
+    want = ref.decode_attention_ref(q, ck, cv, cache_len=clen, window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rolling stats (RAPID monitor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,t,wa,wt", [(4, 200, 64, 16), (130, 96, 32, 8), (1, 50, 16, 4)])
+def test_rolling_stats_matches_ref(n, t, wa, wt):
+    ks = jax.random.split(KEY, 2)
+    ma = jnp.abs(jax.random.normal(ks[0], (n, t))) * 2
+    tp = jnp.abs(jax.random.normal(ks[1], (n, t)))
+    sa, st_, mt = rolling_stats(ma, tp, window_acc=wa, window_tau=wt, interpret=True)
+    ra, rt, rm = ref.rolling_stats_ref(
+        ma, tp, window_acc=wa, window_tau=wt, sigma_floor_acc=1.0, sigma_floor_tau=0.05
+    )
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(ra), atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(rt), atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(mt), np.asarray(rm), atol=5e-5, rtol=5e-5)
+
+
+def test_rolling_stats_matches_trigger_scores():
+    """The kernel must agree with the deployable core.trigger scan."""
+
+    from repro.core.kinematics import KinematicFrame
+    from repro.core.trigger import TriggerConfig, run_trigger
+
+    rng = np.random.default_rng(0)
+    t_len, n = 200, 7
+    qd = rng.normal(0, 0.1, (t_len, n)).astype(np.float32)
+    tau = rng.normal(0, 0.1, (t_len, n)).astype(np.float32)
+    cfg = TriggerConfig()
+    frames = KinematicFrame(
+        jnp.asarray(np.cumsum(qd, 0)), jnp.asarray(qd), jnp.asarray(tau)
+    )
+    _, out = run_trigger(cfg, frames)
+
+    from repro.core import kinematics as kin
+
+    w = kin.end_joint_weights(n, cfg.end_joint_emphasis)
+    qd_prev = jnp.concatenate([jnp.zeros((1, n)), jnp.asarray(qd[:-1])], 0)
+    tau_prev = jnp.concatenate([jnp.zeros((1, n)), jnp.asarray(tau[:-1])], 0)
+    m_acc = kin.accel_magnitude((jnp.asarray(qd) - qd_prev) / cfg.dt, w)
+    tau_pow = kin.torque_power(jnp.asarray(tau) - tau_prev, w)
+    sa, st_, _ = rolling_stats(
+        m_acc[None], tau_pow[None],
+        window_acc=cfg.window_acc, window_tau=cfg.window_tau,
+        sigma_floor_acc=cfg.sigma_floor_acc, sigma_floor_tau=cfg.sigma_floor_tau,
+        interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(sa[0]), np.asarray(out.score_acc), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_[0]), np.asarray(out.score_tau), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+
+MAMBA_CASES = [
+    (2, 512, 8, 64, 16, 128, 4),
+    (1, 256, 4, 32, 8, 256, 4),
+    (1, 128, 2, 16, 4, 64, 2),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,ck,bh", MAMBA_CASES)
+def test_mamba_scan_matches_ref(b, s, h, p, n, ck, bh):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    c = jax.random.normal(ks[4], (b, s, n))
+    y, hT = mamba_scan(x, dt, a, bm, c, chunk=ck, blk_h=bh, interpret=True)
+    yr, hr = ref.mamba_scan_ref(x, dt, a, bm, c, chunk=ck)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hr), atol=5e-4, rtol=5e-3)
+
+
+def test_mamba_scan_sequential_equivalence():
+    """Chunked kernel == token-by-token ssd_step recurrence."""
+
+    from repro.models.ssm import ssd_step
+
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    c = jax.random.normal(ks[4], (b, s, n))
+    y, hT = mamba_scan(x, dt, a, bm, c, chunk=16, blk_h=2, interpret=True)
+    hs = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        yt, hs = ssd_step(x[:, t], dt[:, t], a, bm[:, t], c[:, t], hs)
+        ys.append(yt)
+    y_seq = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hs), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,114 @@
+"""Exactness tests for the §Perf optimized variants.
+
+Every optimization must be bit-compatible (up to f32 roundoff) with its
+baseline: ring KV caches, block-causal skipping, cached cross-attention
+K/V, and capacity MoE dispatch (at uncapped capacity).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model
+
+
+def test_ring_cache_matches_full_cache_decode():
+    cfg = get_smoke_config("h2o-danube-3-4b").replace(
+        dtype="float32", param_dtype="float32",
+        sliding_window=8, subquadratic_decode=True, long_context_window=8,
+    )
+    m_full = Model(cfg)
+    m_ring = Model(cfg, windowed_cache=True)
+    params = m_full.init(jax.random.PRNGKey(0))
+    t_len = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, t_len), 0, cfg.vocab_size)
+    cache_f = m_full.init_cache(1, t_len)
+    cache_r = m_ring.init_cache(1, t_len)
+    assert cache_r["unit"][0]["k"].shape[2] == 8  # ring sized to the window
+    assert cache_f["unit"][0]["k"].shape[2] == t_len
+    step_f = jax.jit(m_full.decode_step)
+    step_r = jax.jit(m_ring.decode_step)
+    for t in range(t_len):
+        lf, cache_f = step_f(params, toks[:, t : t + 1], cache_f)
+        lr, cache_r = step_r(params, toks[:, t : t + 1], cache_r)
+        np.testing.assert_allclose(
+            np.asarray(lf), np.asarray(lr), atol=2e-5, rtol=2e-5
+        )
+
+
+@pytest.mark.parametrize("window", [0, 256])
+def test_causal_skip_matches_full_rectangle(window):
+    from repro.models.attention import _sdpa, _sdpa_chunked, attention_mask
+
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, d = 1, 1024, 4, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    qp = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    o_skip = _sdpa_chunked(q, k, v, qp, qp, True, window, 0.0,
+                           blk_q=128, blk_k=128, causal_skip=True)
+    o_ref = _sdpa(q, k, v, attention_mask(qp, qp, True, window), 0.0)
+    np.testing.assert_allclose(np.asarray(o_skip), np.asarray(o_ref), atol=2e-5)
+
+
+def test_cached_cross_kv_matches_baseline_decode():
+    cfg = get_smoke_config("seamless-m4t-medium").replace(
+        dtype="float32", param_dtype="float32"
+    )
+    m0 = Model(cfg)
+    m1 = Model(cfg, cache_cross_kv=True)
+    key = jax.random.PRNGKey(1)
+    params = m0.init(key)
+    b, s = 2, 32
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "frontend": jax.random.normal(key, (b, s, cfg.d_model)) * 0.02,
+    }
+    l0, c0 = m0.prefill(params, batch, extra=4)
+    l1, c1 = m1.prefill(params, batch, extra=4)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-5)
+    assert "xk" in c1["unit"][0] and "xk" not in c0["unit"][0]
+    nxt = jnp.argmax(l0[:, -1], -1)[:, None]
+    d0, _ = m0.decode_step(params, nxt, c0)
+    d1, _ = m1.decode_step(params, nxt, c1)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), atol=2e-5)
+
+
+def test_capacity_moe_model_forward_matches_dense():
+    """Whole-model equivalence (not just the layer) at uncapped capacity."""
+
+    from repro.configs.base import MoEConfig
+
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b").replace(
+        dtype="float32", param_dtype="float32",
+        moe=MoEConfig(num_experts=4, num_experts_per_tok=2, every=1,
+                      capacity_factor=4.0),
+    )
+    m_dense = Model(cfg, moe_impl="dense")
+    m_cap = Model(cfg, moe_impl="capacity")
+    params = m_dense.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)}
+    x0, _, _ = m_dense.forward(params, batch)
+    x1, _, _ = m_cap.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(x0), np.asarray(x1), atol=5e-5, rtol=5e-5)
+
+
+def test_capacity_moe_drops_overflow_tokens():
+    """At capacity_factor << 1 some tokens must be dropped (GShard
+    semantics), and the layer must remain finite."""
+
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as moe_lib
+
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").replace(dtype="float32")
+    params, _ = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    tight, _ = moe_lib.moe_forward_capacity(x, params, cfg, capacity_factor=0.25)
+    dense, _ = moe_lib.moe_forward(x, params, cfg)
+    assert np.isfinite(np.asarray(tight)).all()
+    # overflow dropping must change the output vs uncapped
+    assert float(jnp.max(jnp.abs(tight - dense))) > 1e-3

@@ -1,0 +1,175 @@
+"""Unit + property tests for the RAPID core (kinematics, stats, trigger)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kinematics as kin
+from repro.core import stats as rstats
+from repro.core.trigger import TriggerConfig, trigger_init, trigger_step, run_trigger
+from repro.core.kinematics import KinematicFrame
+
+
+# ---------------------------------------------------------------------------
+# kinematics
+# ---------------------------------------------------------------------------
+
+
+def test_finite_diff_accel():
+    qd = jnp.array([1.0, 2.0]); qd_prev = jnp.array([0.5, 1.0])
+    acc = kin.finite_diff_accel(qd, qd_prev, 0.5)
+    np.testing.assert_allclose(acc, [1.0, 2.0])
+
+
+def test_accel_magnitude_weighted():
+    w = jnp.array([1.0, 2.0])
+    acc = jnp.array([3.0, 4.0])
+    np.testing.assert_allclose(kin.accel_magnitude(acc, w), np.sqrt(9 + 64.0))
+
+
+def test_phase_weights_clip():
+    w_a, w_t = kin.phase_weights(jnp.array([0.0, 1.0, 5.0]), v_max=2.0)
+    np.testing.assert_allclose(w_a, [0.0, 0.5, 1.0])
+    np.testing.assert_allclose(w_a + w_t, 1.0)
+
+
+@given(
+    st.lists(st.floats(-10, 10), min_size=3, max_size=40),
+)
+@settings(max_examples=30, deadline=None)
+def test_window_stats_match_numpy(xs):
+    """Property: ring-buffer windowed mean/std == numpy over trailing window."""
+
+    w = 8
+    s = rstats.window_init(w)
+    for i, x in enumerate(xs):
+        s = rstats.window_update(s, jnp.float32(x))
+        mean, std = rstats.window_mean_std(s)
+        ref = np.asarray(xs[max(0, i + 1 - w) : i + 1], np.float32)
+        np.testing.assert_allclose(float(mean), ref.mean(), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(std), ref.std(), rtol=1e-3, atol=1e-3)
+
+
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_running_stats_welford(xs):
+    s = rstats.running_init()
+    for x in xs:
+        s = rstats.running_update(s, jnp.float32(x))
+    mean, std = rstats.running_mean_std(s)
+    ref = np.asarray(xs, np.float32)
+    np.testing.assert_allclose(float(mean), ref.mean(), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(std), ref.std(), rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# trigger
+# ---------------------------------------------------------------------------
+
+
+def _smooth_frames(t_len=300, n=7, seed=0):
+    rng = np.random.default_rng(seed)
+    qd = np.ones((t_len, n), np.float32) * 0.3 + rng.normal(0, 1e-4, (t_len, n))
+    tau = rng.normal(0, 0.02, (t_len, n)).astype(np.float32)
+    q = np.cumsum(qd, 0) * 0.002
+    return KinematicFrame(jnp.asarray(q), jnp.asarray(qd), jnp.asarray(tau))
+
+
+def test_no_trigger_on_smooth_motion():
+    cfg = TriggerConfig()
+    frames = _smooth_frames()
+    _, out = run_trigger(cfg, frames)
+    assert int(out.trigger.sum()) == 0
+
+
+def test_trigger_fires_on_torque_spike():
+    cfg = TriggerConfig()
+    f = _smooth_frames(400)
+    tau = np.asarray(f.tau).copy()
+    tau[300:315] += 5.0  # contact burst
+    frames = KinematicFrame(f.q, f.qd, jnp.asarray(tau))
+    _, out = run_trigger(cfg, frames)
+    trig = np.asarray(out.trigger)
+    assert trig[300:320].any(), "contact spike must trigger"
+    assert not trig[:300].any(), "no false positives before contact"
+
+
+def test_trigger_fires_on_accel_spike():
+    cfg = TriggerConfig()
+    f = _smooth_frames(400)
+    qd = np.asarray(f.qd).copy()
+    qd[250:] += 1.5  # sudden velocity jump = accel spike (task switch)
+    frames = KinematicFrame(f.q, jnp.asarray(qd), f.tau)
+    _, out = run_trigger(cfg, frames)
+    trig = np.asarray(out.trigger)
+    assert trig[248:256].any()
+
+
+def test_cooldown_masks_dispatch():
+    """Eq. 8: after a dispatch, no dispatch for C steps even if triggered."""
+
+    cfg = TriggerConfig(cooldown_steps=10)
+    f = _smooth_frames(400)
+    tau = np.asarray(f.tau).copy()
+    tau[200:260] += 6.0  # sustained contact
+    frames = KinematicFrame(f.q, f.qd, jnp.asarray(tau))
+    _, out = run_trigger(cfg, frames)
+    disp = np.flatnonzero(np.asarray(out.dispatch))
+    assert len(disp) >= 2
+    assert (np.diff(disp) >= cfg.cooldown_steps).all()
+
+
+def test_warmup_suppresses_early_triggers():
+    cfg = TriggerConfig(warmup=64)
+    f = _smooth_frames(100)
+    tau = np.asarray(f.tau).copy()
+    tau[10:20] += 9.0  # spike during warmup
+    frames = KinematicFrame(f.q, f.qd, jnp.asarray(tau))
+    _, out = run_trigger(cfg, frames)
+    assert not np.asarray(out.trigger)[:64].any()
+
+
+def test_phase_weights_gate_monitors():
+    """High-speed phase weights acceleration; low-speed weights torque."""
+
+    cfg = TriggerConfig(v_max=2.0)
+    state = trigger_init(cfg)
+    fast = KinematicFrame(
+        q=jnp.zeros(7), qd=jnp.full(7, 2.0), tau=jnp.zeros(7)
+    )
+    _, out = trigger_step(state, fast, cfg)
+    assert float(out.w_acc) == 1.0
+    slow = KinematicFrame(q=jnp.zeros(7), qd=jnp.zeros(7), tau=jnp.zeros(7))
+    _, out = trigger_step(state, slow, cfg)
+    assert float(out.w_acc) == 0.0
+
+
+def test_batched_trigger_vmaps():
+    """The monitor state/step must vectorize over robot fleets."""
+
+    cfg = TriggerConfig()
+    f = _smooth_frames(128)
+    frames = KinematicFrame(
+        q=jnp.stack([f.q, f.q], 1), qd=jnp.stack([f.qd, f.qd], 1),
+        tau=jnp.stack([f.tau, f.tau], 1),
+    )
+    state, out = run_trigger(cfg, frames)
+    assert out.trigger.shape == (128, 2)
+    np.testing.assert_array_equal(np.asarray(out.trigger[:, 0]), np.asarray(out.trigger[:, 1]))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_noise_immunity_property(seed):
+    """Kinematic trigger output is invariant to any visual-noise regime by
+    construction — the compatibility claim (paper Insight 1)."""
+
+    from repro.robotics.episodes import generate_episode
+    from repro.robotics.noise import kinematic_streams_under_noise
+
+    ep = generate_episode("pick_place", seed=seed % 100)
+    for regime in ("standard", "visual_noise", "distraction"):
+        ep2 = kinematic_streams_under_noise(ep, regime)
+        assert ep2 is ep  # bit-identical proprioception
