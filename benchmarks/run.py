@@ -34,6 +34,10 @@ def main(argv=None) -> None:
     from benchmarks.roofline_table import perf_deltas, roofline_rows
 
     print("name,us_per_call,derived")
+    # serving engine: runs in --fast mode too (tracks the perf trajectory)
+    from benchmarks import serving_bench
+
+    _timed("serving_engine_speedup_8req", serving_bench.bench_rows, detail)
     _timed("table1_vision_noise_degradation", tables.table1_vision_noise, detail)
     _timed("table3_simulation_speedup", tables.table3_simulation, detail)
     _timed("table4_realworld_speedup", tables.table4_real_world, detail)

@@ -3,9 +3,15 @@
 The RAPID dispatcher monitors simulated manipulator kinematics; every
 dispatch runs an actual prefill + autoregressive action-token decode through
 the OpenVLA-style backbone (smoke scale on CPU; swap --arch and a TPU mesh
-for production).
+for production).  The chunk decode is a single fused on-device ``lax.scan``
+— no per-token host syncs.
+
+With ``--fleet N`` the same cloud engine serves N robots through the
+continuous-batching scheduler: dispatch triggers become requests that join
+in-flight decode batches, and chunks arrive back a few rounds later.
 
     PYTHONPATH=src python examples/ecc_serving.py --task drawer_open
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 4
 """
 
 import argparse
@@ -15,7 +21,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import EpisodeTokenizer
-from repro.launch.serve import CloudPolicy, serve_episode
+from repro.launch.serve import CloudPolicy, serve_episode, serve_fleet
 from repro.models.model import Model
 
 
@@ -25,6 +31,8 @@ def main(argv=None):
     p.add_argument("--task", default="pick_place",
                    choices=["pick_place", "drawer_open", "peg_insertion"])
     p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--fleet", type=int, default=0,
+                   help="serve N robots through the continuous-batching scheduler")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -32,6 +40,16 @@ def main(argv=None):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
+
+    if args.fleet:
+        out = serve_fleet(
+            model, params, tok, n_robots=args.fleet, max_steps=args.steps
+        )
+        served = len(out["service_rounds"])
+        print(f"chunks served: {served} (peak decode batch {out['peak_batch']})")
+        print(f"actions executed: {out['actions'].shape}")
+        return
+
     policy = CloudPolicy(model, params, tok)
     out = serve_episode(policy, task=args.task, max_steps=args.steps)
     frac = out["offloads"] / max(out["steps"] // 8, 1)

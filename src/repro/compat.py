@@ -1,0 +1,21 @@
+"""Version-compatibility shims for the installed jax (0.4.37 here).
+
+Newer jax renamed/reshaped a couple of APIs the code targets; every call
+site routes through this module so the next rename is a one-line fix.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def cost_dict(cost):
+    """Normalize ``compiled.cost_analysis()`` output (older jax wraps the
+    properties dict in a single-element list)."""
+
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost

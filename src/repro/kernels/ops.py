@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba_scan as _ms
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rolling_stats as _rs
 from repro.kernels import ref as _ref
 
@@ -56,6 +57,22 @@ def decode_attention(q, cache_k, cache_v, *, cache_len, window=0,
     return _dec.decode_attention(
         q, cache_k, cache_v, cache_len=cache_len, window=window,
         logit_cap=logit_cap, blk_s=bs, interpret=_interpret(),
+    )
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_lens, *,
+                           window=0, logit_cap=0.0):
+    """Ragged-batch decode over the shared page pool (serving hot path).
+
+    Compiled on TPU; the CPU container runs the kernel in interpret mode,
+    which is exact but slow — the continuous-batching scheduler therefore
+    keeps its CPU smoke path on the jnp oracle via the model's decode step
+    and this op is exercised by the kernel test sweeps.
+    """
+
+    return _pa.paged_decode_attention(
+        q, k_pages, v_pages, page_table, cache_lens,
+        window=window, logit_cap=logit_cap, interpret=_interpret(),
     )
 
 

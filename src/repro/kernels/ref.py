@@ -57,6 +57,37 @@ def decode_attention_ref(
     return jnp.einsum("bhk,bkhd->bhd", p, vr).astype(q.dtype)
 
 
+def paged_decode_attention_ref(
+    q, k_pages, v_pages, page_table, cache_lens, *, window=0, logit_cap=0.0
+):
+    """Ragged paged decode oracle.
+
+    q [B,H,D]; k/v pages [P, page, KV, D]; page_table [B, MAXP];
+    cache_lens [B].  Gathers each sequence's pages into a dense
+    [MAXP*page] cache and attends over the first ``cache_lens[b]`` slots.
+    """
+
+    p_, page, kv, d = k_pages.shape
+    b, h, _ = q.shape
+    g = h // kv
+    # [B, MAXP, page, KV, D] -> [B, S, KV, D] with S = MAXP*page
+    k = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, kv, d)
+    v = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, kv, d)
+    kr = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * d**-0.5
+    if logit_cap:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    pos = jnp.arange(k.shape[1])[None, None, :]
+    lens = jnp.asarray(cache_lens)[:, None, None]
+    valid = pos < lens
+    if window:
+        valid &= pos >= lens - window
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vr).astype(q.dtype)
+
+
 def rolling_stats_ref(
     m_acc, tau_pow, *, window_acc, window_tau,
     sigma_floor_acc, sigma_floor_tau, eps=1e-6,

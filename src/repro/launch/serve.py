@@ -5,13 +5,22 @@ cloud VLA: the RAPID dispatcher monitors simulated robot kinematics; on
 dispatch, the *actual model* (prefill + decode of action tokens through the
 KV cache) produces the chunk.  On a TPU slice the same ``CloudPolicy`` wraps
 the production-mesh sharded model.
+
+Two serving modes:
+  * ``serve_episode`` — one robot, one ``CloudPolicy``; the action chunk is
+    decoded by a single fused on-device ``lax.scan`` (no per-token host
+    syncs).
+  * ``serve_fleet`` — many robots sharing one cloud engine through the
+    continuous-batching scheduler (``runtime/scheduler.py``): dispatch
+    triggers become requests that join in-flight decode batches, and chunks
+    arrive back asynchronously a few scheduler rounds later.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,19 +35,33 @@ from repro.robotics.episodes import generate_episode
 
 
 class CloudPolicy:
-    """Batched VLA serving: observation tokens -> k-step action chunk."""
+    """Batched VLA serving: observation tokens -> k-step action chunk.
+
+    ``fused=True`` (default) decodes the whole ``chunk_len * n_joints`` token
+    chunk in one jitted ``lax.scan`` with zero host↔device syncs.
+    ``fused=False`` keeps the legacy per-token Python loop (one jitted call
+    and an ``np.asarray`` sync per token) — the baseline the serving bench
+    measures against; both produce bit-identical greedy chunks.
+    """
 
     def __init__(self, model: Model, params, tokenizer: EpisodeTokenizer,
-                 chunk_len: int = 8, n_joints: int = 7):
+                 chunk_len: int = 8, n_joints: int = 7, fused: bool = True):
         self.model = model
         self.params = params
         self.tok = tokenizer
         self.chunk_len = chunk_len
         self.n_joints = n_joints
+        self.fused = fused
+        n_steps = chunk_len * n_joints
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, extra=chunk_len * n_joints)
+            lambda p, b: model.prefill(p, b, extra=n_steps)
         )
         self._decode = jax.jit(model.decode_step)
+        self._decode_chunk = jax.jit(
+            lambda p, logits, cache: model.decode_chunk(
+                p, logits, cache, n_steps, tokenizer.action_base
+            )[0]
+        )
 
     def __call__(self, qd: np.ndarray, tau: np.ndarray) -> np.ndarray:
         """qd/tau [B, N] -> action chunk [B, k, N] via autoregressive decode."""
@@ -48,17 +71,21 @@ class CloudPolicy:
         )
         batch = {"tokens": jnp.asarray(obs)}
         logits, cache = self._prefill(self.params, batch)
-        # greedy decode k*N action tokens, masked to the action-bin range
-        acts = []
-        base = self.tok.action_base
-        tok = None
-        for _ in range(self.chunk_len * self.n_joints):
-            ls = logits[:, -1] if tok is None else logits[:, 0]
-            ls = ls.at[..., : base].set(-1e9)  # only action bins
-            tok = jnp.argmax(ls, axis=-1)[:, None]
-            acts.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, tok, cache)
-        toks = np.concatenate(acts, axis=1)  # [B, k*N]
+        if self.fused:
+            toks = np.asarray(self._decode_chunk(self.params, logits, cache))
+        else:
+            # legacy loop: greedy decode k*N action tokens one by one,
+            # masked to the action-bin range, syncing to host each step
+            acts = []
+            base = self.tok.action_base
+            tok = None
+            for _ in range(self.chunk_len * self.n_joints):
+                ls = logits[:, -1] if tok is None else logits[:, 0]
+                ls = ls.at[..., : base].set(-1e9)  # only action bins
+                tok = jnp.argmax(ls, axis=-1)[:, None]
+                acts.append(np.asarray(tok))
+                logits, cache = self._decode(self.params, tok, cache)
+            toks = np.concatenate(acts, axis=1)  # [B, k*N]
         return self.tok.decode_action(toks).reshape(-1, self.chunk_len, self.n_joints)
 
 
@@ -110,17 +137,104 @@ def serve_episode(
     }
 
 
+def serve_fleet(
+    model: Model,
+    params,
+    tokenizer: EpisodeTokenizer,
+    n_robots: int = 4,
+    tasks: Optional[List[str]] = None,
+    seed: int = 0,
+    chunk_len: int = 8,
+    n_joints: int = 7,
+    max_steps: int = 300,
+    max_slots: int = 8,
+    verbose: bool = True,
+):
+    """A robot fleet served by one continuous-batching cloud engine.
+
+    Each control tick every robot's dispatcher runs (vmapped over the
+    fleet); triggered robots submit chunk requests, the scheduler advances
+    one decode round, and finished chunks land back in the robots' queues —
+    possibly several ticks after the trigger, so the fleet genuinely
+    exercises ragged in-flight batches.
+    """
+
+    from repro.runtime.scheduler import ContinuousBatchingScheduler
+
+    all_tasks = tasks or ["pick_place", "drawer_open", "peg_insertion"]
+    eps = [
+        generate_episode(all_tasks[i % len(all_tasks)], seed=seed + i)
+        for i in range(n_robots)
+    ]
+    t_len = min(max_steps, min(ep.q.shape[0] for ep in eps))
+
+    dcfg = DispatcherConfig(chunk_len=chunk_len, action_dim=n_joints)
+    state = dispatcher_init(dcfg, batch_shape=(n_robots,))
+    step_fn = jax.jit(lambda s, f, c: dispatcher_step(s, f, c, dcfg))
+
+    sched = ContinuousBatchingScheduler(
+        model, params, tokenizer,
+        max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
+    )
+
+    cached = np.zeros((n_robots, chunk_len, n_joints), np.float32)
+    actions = np.zeros((t_len, n_robots, n_joints), np.float32)
+    n_off = np.zeros(n_robots, np.int64)
+    wait_rounds: List[int] = []
+    in_flight = set()
+
+    for t in range(t_len):
+        frame = KinematicFrame(
+            q=jnp.asarray(np.stack([ep.q[t] for ep in eps])),
+            qd=jnp.asarray(np.stack([ep.qd[t] for ep in eps])),
+            tau=jnp.asarray(np.stack([ep.tau[t] for ep in eps])),
+        )
+        state, out = step_fn(state, frame, jnp.asarray(cached))
+        trig = np.asarray(out.offloaded)
+        for r in np.flatnonzero(trig):
+            if r in in_flight:
+                continue  # previous request still decoding; keep executing
+            sched.submit(int(r), eps[r].qd[t][None], eps[r].tau[t][None])
+            in_flight.add(int(r))
+            n_off[r] += 1
+        for res in sched.step():
+            cached[res.robot_id] = tokenizer.decode_action(
+                res.tokens
+            ).reshape(chunk_len, n_joints)
+            in_flight.discard(res.robot_id)
+            wait_rounds.append(res.completed_round - res.submitted_round)
+        actions[t] = np.asarray(out.action)
+
+    if verbose:
+        print(
+            f"fleet={n_robots} steps={t_len} offloads={int(n_off.sum())} "
+            f"mean_service_rounds={np.mean(wait_rounds) if wait_rounds else 0:.1f} "
+            f"peak_batch={sched.peak_active}"
+        )
+    return {
+        "offloads": n_off,
+        "steps": t_len,
+        "actions": actions,
+        "service_rounds": wait_rounds,
+        "peak_batch": sched.peak_active,
+    }
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="openvla-7b")
     p.add_argument("--task", default="pick_place")
     p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--fleet", type=int, default=0,
+                   help="serve N robots through the continuous-batching scheduler")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
+    if args.fleet:
+        return serve_fleet(model, params, tok, n_robots=args.fleet, max_steps=args.steps)
     policy = CloudPolicy(model, params, tok)
     return serve_episode(policy, task=args.task, max_steps=args.steps)
 

@@ -405,6 +405,12 @@ def attention_decode_step(
 ):
     """One-token decode.  x:[B,1,D]; cache_k/v:[B,S,KV,Dh].
 
+    ``cache_len`` may be a scalar (the whole batch at the same depth — the
+    single-robot serving loop) or a [B] vector (continuous batching: each
+    slot at its own decode depth).  The vector path writes each sequence's
+    token at its own slot and masks per-sequence lengths, so ragged batches
+    share one decode step.
+
     ring=False (baseline): plain append at position ``cache_len``; the full
     cache is read and masked every step.
     ring=True (§Perf): the cache length equals the layer's attention window
@@ -420,19 +426,31 @@ def attention_decode_step(
     hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
     s_cache = cache_k.shape[1]
     pos = cache_len  # scalar or [B]
+    ragged = jnp.ndim(pos) >= 1
     pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
     q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, nh, hd)
     k = (x @ params["wk"].astype(x.dtype)).reshape(b, 1, nkv, hd)
     v = (x @ params["wv"].astype(x.dtype)).reshape(b, 1, nkv, hd)
     q = rope(q, pos_b[:, None], cfg.rope_theta)
     k = rope(k, pos_b[:, None], cfg.rope_theta)
-    # append position (same for the whole batch in our serving engine)
-    idx = jnp.asarray(pos, jnp.int32).reshape(())
-    slot = jnp.remainder(idx, s_cache) if ring else idx
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    if ragged:
+        # per-sequence append slots (continuous batching)
+        idx_b = jnp.asarray(pos_b, jnp.int32)
+        slot_b = jnp.remainder(idx_b, s_cache) if ring else jnp.minimum(idx_b, s_cache - 1)
+        cache_k = jax.vmap(
+            lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i, 0, 0))
+        )(cache_k, k.astype(cache_k.dtype), slot_b)
+        cache_v = jax.vmap(
+            lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i, 0, 0))
+        )(cache_v, v.astype(cache_v.dtype), slot_b)
+    else:
+        # append position (same for the whole batch)
+        idx = jnp.asarray(pos, jnp.int32).reshape(())
+        slot = jnp.remainder(idx, s_cache) if ring else idx
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
 
-    if impl == "pallas" and not ring:
+    if impl == "pallas" and not ring and not ragged:
         from repro.kernels import ops as kops
 
         out = kops.decode_attention(
@@ -445,11 +463,10 @@ def attention_decode_step(
         )[:, None]
     else:
         k_pos = jnp.arange(s_cache)
-        valid = k_pos[None, :] <= idx
+        valid = k_pos[None, :] <= jnp.asarray(pos_b, jnp.int32)[:, None]  # [B,S]
         if window and not ring:
-            valid &= k_pos[None, :] > idx - window
-        mask = valid[:, None, :]  # [1,1,S] broadcast over batch
-        mask = jnp.broadcast_to(mask, (b, 1, s_cache))
+            valid &= k_pos[None, :] > jnp.asarray(pos_b, jnp.int32)[:, None] - window
+        mask = valid[:, None, :]  # [B,1,S]
         out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg.attn_logit_softcap)
     out = out.reshape(b, 1, nh * hd) @ params["wo"].astype(x.dtype)
     return out, cache_k, cache_v

@@ -401,6 +401,12 @@ class Model:
         new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *cache_parts)
         return x, aux, list(new_cache)
 
+    # decode-step repeats at or below this are fully unrolled: the scan's
+    # per-iteration param slicing + while-loop bookkeeping costs more than a
+    # shallow stack's whole step (the serving engine decodes thousands of
+    # single tokens); deep stacks keep the rolled scan for bounded HLO
+    STEP_UNROLL_MAX = 8
+
     def _run_unit_step(self, params_unit, x, cache_unit, cache_len, enc_out=None, enc_pos=None):
         def body(x, xs):
             p_list, c_list = xs
@@ -410,7 +416,10 @@ class Model:
                 new_c.append(cj)
             return x, tuple(new_c)
 
-        x, new_cache = jax.lax.scan(body, x, (tuple(params_unit), tuple(cache_unit)))
+        x, new_cache = jax.lax.scan(
+            body, x, (tuple(params_unit), tuple(cache_unit)),
+            unroll=self.repeats <= self.STEP_UNROLL_MAX,
+        )
         return x, list(new_cache)
 
     # ------------------------------------------------------------------
@@ -582,6 +591,33 @@ class Model:
         new_cache["unit"] = new_unit
         new_cache["len"] = cache["len"] + 1
         return logits, new_cache
+
+    def decode_chunk(self, params, logits, cache, n_steps: int, token_floor: int = 0):
+        """Fused greedy decode of ``n_steps`` tokens, fully on device.
+
+        Replaces the serving per-token Python loop (one jitted call plus a
+        host↔device sync per token) with a single ``lax.scan``: mask logits
+        to ids >= ``token_floor`` (the action-bin range for VLA serving),
+        argmax, feed the token back through ``decode_step``, repeat.  With a
+        [B]-vector ``cache["len"]`` the same scan serves ragged
+        continuous-batching rounds.
+
+        Returns (tokens [B, n_steps], next logits [B,1,V], cache).
+        """
+
+        def step(carry, _):
+            logits, cache = carry
+            ls = logits[:, -1]
+            if token_floor:
+                ls = ls.at[..., :token_floor].set(-1e9)
+            tok = jnp.argmax(ls, axis=-1)[:, None]
+            logits, cache = self.decode_step(params, tok, cache)
+            return (logits, cache), tok[:, 0]
+
+        (logits, cache), toks = jax.lax.scan(
+            step, (logits, cache), None, length=n_steps
+        )
+        return jnp.moveaxis(toks, 0, 1), logits, cache
 
     # ------------------------------------------------------------------
     # caches

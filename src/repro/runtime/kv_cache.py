@@ -1,0 +1,223 @@
+"""Paged KV-cache manager: fixed-size pages, free-list allocator, page tables.
+
+Continuous-batching serving cannot pre-carve one [B, S_max] KV slab per
+request: requests arrive at different times, decode to different depths, and
+a slab sized for the longest request wastes HBM on all the others.  Instead
+all sequences draw fixed-size pages from one shared pool; a per-sequence
+page table maps logical token positions to pool pages, and the paged Pallas
+decode kernel (``kernels/paged_attention.py``) follows that indirection with
+per-sequence lengths — so ragged sequences share a single decode launch.
+
+Bookkeeping (free list, page tables, lengths) is host-side numpy — it is
+O(requests) per control tick and must not involve the device.  The page
+pools are device arrays updated with jitted scatters.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+class OutOfPages(RuntimeError):
+    """The pool has no free pages; the scheduler must defer admission."""
+
+
+class PageAllocator:
+    """LIFO free-list over a fixed pool of page ids (host-side, O(1) ops)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError("num_pages must be positive")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"requested {n} pages, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page id {p} out of range")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_tokens(pool: jax.Array, slots: jax.Array, vals: jax.Array) -> jax.Array:
+    """pool [P*page, KV, D]; slots [n] flat token slots; vals [n, KV, D]."""
+
+    return pool.at[slots].set(vals.astype(pool.dtype))
+
+
+@dataclass
+class SeqEntry:
+    pages: List[int]
+    length: int
+
+
+class PagedKVCache:
+    """One attention layer's shared KV page pool + per-sequence page tables.
+
+    ``append`` writes one new token per active sequence (the decode step);
+    ``write_prompt`` bulk-writes a prefilled prompt; ``attend`` runs the
+    ragged paged decode kernel over every registered sequence.  A model with
+    L attention layers holds L of these (they share nothing but code).
+    """
+
+    def __init__(
+        self,
+        num_pages: int,
+        page_size: int,
+        num_kv_heads: int,
+        head_dim: int,
+        max_pages_per_seq: int,
+        dtype=jnp.float32,
+    ):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_kv_heads = num_kv_heads
+        self.head_dim = head_dim
+        self.max_pages_per_seq = max_pages_per_seq
+        self.allocator = PageAllocator(num_pages)
+        # flat [P*page, KV, D] storage: token scatters are 1-D index updates;
+        # the kernel view reshapes to [P, page, KV, D] without a copy
+        self._k = jnp.zeros((num_pages * page_size, num_kv_heads, head_dim), dtype)
+        self._v = jnp.zeros_like(self._k)
+        self._seqs: Dict[int, SeqEntry] = {}
+
+    # ------------------------------------------------------------------
+    # sequence lifecycle
+    # ------------------------------------------------------------------
+
+    def add_seq(self, seq_id: int) -> None:
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already registered")
+        self._seqs[seq_id] = SeqEntry(pages=[], length=0)
+
+    def free_seq(self, seq_id: int) -> None:
+        entry = self._seqs.pop(seq_id)
+        self.allocator.free(entry.pages)
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._seqs[seq_id].length
+
+    @property
+    def seq_ids(self) -> List[int]:
+        return sorted(self._seqs)
+
+    def can_admit(self, total_tokens: int) -> bool:
+        """Would a sequence of ``total_tokens`` fit right now?"""
+
+        need = -(-total_tokens // self.page_size)
+        return need <= min(self.allocator.num_free, self.max_pages_per_seq)
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+
+    def _ensure_capacity(self, entry: SeqEntry, new_len: int) -> None:
+        need = -(-new_len // self.page_size)
+        if need > self.max_pages_per_seq:
+            raise OutOfPages(
+                f"sequence needs {need} pages > max_pages_per_seq={self.max_pages_per_seq}"
+            )
+        if need > len(entry.pages):
+            entry.pages.extend(self.allocator.alloc(need - len(entry.pages)))
+
+    def _flat_slots(self, entry: SeqEntry, positions: np.ndarray) -> np.ndarray:
+        pages = np.asarray(entry.pages, np.int64)
+        return pages[positions // self.page_size] * self.page_size + (
+            positions % self.page_size
+        )
+
+    def write_prompt(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        """Bulk-write a prefilled prompt.  k/v: [S, KV, D]."""
+
+        entry = self._seqs[seq_id]
+        s = k.shape[0]
+        self._ensure_capacity(entry, entry.length + s)
+        positions = np.arange(entry.length, entry.length + s)
+        slots = jnp.asarray(self._flat_slots(entry, positions))
+        self._k = _scatter_tokens(self._k, slots, k)
+        self._v = _scatter_tokens(self._v, slots, v)
+        entry.length += s
+
+    def append(self, seq_ids: List[int], k: jax.Array, v: jax.Array) -> None:
+        """Write one decode token per sequence.  k/v: [len(seq_ids), KV, D].
+
+        Capacity for every sequence is reserved before any length is
+        mutated, so an ``OutOfPages`` raised mid-batch leaves the cache
+        consistent (some pages reserved early, but no length claims a
+        token whose KV was never written) and the caller can defer.
+        """
+
+        counts: Dict[int, int] = {}
+        for sid in seq_ids:
+            counts[sid] = counts.get(sid, 0) + 1
+        for sid, n in counts.items():
+            entry = self._seqs[sid]
+            self._ensure_capacity(entry, entry.length + n)
+        slots = np.empty(len(seq_ids), np.int64)
+        for i, sid in enumerate(seq_ids):
+            entry = self._seqs[sid]
+            slots[i] = self._flat_slots(entry, np.asarray([entry.length]))[0]
+            entry.length += 1
+        self._k = _scatter_tokens(self._k, jnp.asarray(slots), k)
+        self._v = _scatter_tokens(self._v, jnp.asarray(slots), v)
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+
+    def page_table(self, seq_ids: Optional[List[int]] = None) -> np.ndarray:
+        """[B, max_pages_per_seq] int32; unallocated entries point at page 0."""
+
+        ids = self.seq_ids if seq_ids is None else seq_ids
+        table = np.zeros((len(ids), self.max_pages_per_seq), np.int32)
+        for i, sid in enumerate(ids):
+            pages = self._seqs[sid].pages
+            table[i, : len(pages)] = pages
+        return table
+
+    def lengths(self, seq_ids: Optional[List[int]] = None) -> np.ndarray:
+        ids = self.seq_ids if seq_ids is None else seq_ids
+        return np.asarray([self._seqs[sid].length for sid in ids], np.int32)
+
+    def kernel_view(self):
+        """(k_pages, v_pages) shaped [P, page, KV, D] for the Pallas kernel."""
+
+        shape = (self.num_pages, self.page_size, self.num_kv_heads, self.head_dim)
+        return self._k.reshape(shape), self._v.reshape(shape)
+
+    def attend(
+        self,
+        q: jax.Array,                      # [B, H, D], rows ordered as seq_ids
+        seq_ids: Optional[List[int]] = None,
+        *,
+        window: int = 0,
+        logit_cap: float = 0.0,
+    ) -> jax.Array:
+        """Ragged paged decode attention over the registered sequences."""
+
+        kp, vp = self.kernel_view()
+        return kops.paged_decode_attention(
+            q, kp, vp,
+            jnp.asarray(self.page_table(seq_ids)),
+            jnp.asarray(self.lengths(seq_ids)),
+            window=window, logit_cap=logit_cap,
+        )

@@ -1,0 +1,273 @@
+"""Continuous-batching scheduler for the cloud action-chunk engine.
+
+The seed served one robot at a time: a request had to wait for the previous
+chunk's full decode, and every decode step paid a host sync.  This scheduler
+keeps a fixed pool of *slots* (the decode batch) and lets requests join and
+leave it mid-flight:
+
+  * **admission** — pending requests are prefillled (one batched jitted
+    call) and merged into free slots of the live batch while other slots
+    keep decoding; per-slot ``cache["len"]`` is a vector, so the batch is
+    ragged from the model's point of view (``attention_decode_step``'s
+    vector path).
+  * **decode rounds** — each ``step()`` advances every active slot by
+    ``decode_block`` greedy action tokens through one fused on-device
+    ``lax.scan`` (``Model.decode_chunk``); the only host sync is the single
+    token read-back per round.
+  * **page accounting** — admission is gated by a ``PageAllocator`` over the
+    KV page pool (``runtime/kv_cache.py``): a request is admitted only if
+    its prompt + chunk worth of pages is free, and its pages return to the
+    free list at completion.  On TPU the same accounting drives the paged
+    pools behind ``kernels/paged_attention.py``; the CPU smoke path keeps
+    the model's dense per-slot cache.
+
+Robots at different trigger times therefore share decode batches — the
+multi-tenant serving mode the RAPID cloud side needs.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import EpisodeTokenizer
+from repro.models.model import Model
+from repro.runtime.kv_cache import PageAllocator
+
+DEFAULT_PAGE_SIZE = 16
+
+
+@dataclass
+class ChunkRequest:
+    robot_id: int
+    obs: np.ndarray          # [S_obs] observation token ids
+    submitted_round: int
+
+
+@dataclass
+class ChunkResult:
+    robot_id: int
+    tokens: np.ndarray       # [chunk_len * n_joints] greedy action tokens
+    submitted_round: int
+    admitted_round: int
+    completed_round: int
+
+
+@dataclass
+class _Slot:
+    robot_id: int = -1
+    remaining: int = 0
+    pages: Optional[List[int]] = None
+    request: Optional[ChunkRequest] = None
+    admitted_round: int = -1
+    tokens: Optional[List[int]] = None
+
+    @property
+    def active(self) -> bool:
+        return self.remaining > 0
+
+
+class ContinuousBatchingScheduler:
+    """Fixed-slot continuous batcher over the model's ragged decode step."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        tokenizer: EpisodeTokenizer,
+        max_slots: int = 8,
+        chunk_len: int = 8,
+        n_joints: int = 7,
+        decode_block: Optional[int] = None,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        num_pages: Optional[int] = None,
+    ):
+        if model.cfg.encoder_decoder:
+            raise NotImplementedError("continuous batching targets decoder-only VLAs")
+        self.model = model
+        self.params = params
+        self.tok = tokenizer
+        self.max_slots = max_slots
+        self.chunk_len = chunk_len
+        self.n_joints = n_joints
+        self.total_tokens = chunk_len * n_joints
+        self.decode_block = decode_block or n_joints
+        self.prompt_len = 2 * n_joints
+        self.round = 0
+        self.peak_active = 0
+
+        # KV page accounting: a request needs prompt + chunk tokens resident
+        self.page_size = page_size
+        self.pages_per_req = -(-(self.prompt_len + self.total_tokens) // page_size)
+        pool = num_pages if num_pages is not None else self.pages_per_req * max_slots
+        self.allocator = PageAllocator(pool)
+
+        self._queue: Deque[ChunkRequest] = deque()
+        self._slots = [_Slot() for _ in range(max_slots)]
+
+        n_steps = self.total_tokens
+        base = tokenizer.action_base
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, extra=n_steps)
+        )
+
+        def admit(params, cache, logits_rows, obs_batch, admit_mask):
+            new_logits, pcache = model.prefill(
+                params, {"tokens": obs_batch}, extra=n_steps
+            )
+
+            def mrg(new, old):
+                m = admit_mask.reshape((1, max_slots) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+
+            unit = jax.tree.map(mrg, pcache["unit"], cache["unit"])
+            cache = dict(cache)
+            cache["unit"] = unit
+            cache["len"] = jnp.where(
+                admit_mask, jnp.int32(self.prompt_len), cache["len"]
+            )
+            logits_rows = jnp.where(
+                admit_mask[:, None], new_logits[:, -1], logits_rows
+            )
+            return cache, logits_rows
+
+        self._admit = jax.jit(admit)
+
+        def decode_rounds(params, logits_rows, cache, active_mask):
+            toks, logits, cache = model.decode_chunk(
+                params, logits_rows[:, None], cache, self.decode_block, base
+            )
+            # idle slots produced garbage writes at their own rows; pin their
+            # lengths back to zero so idle caches never grow across rounds
+            cache = dict(cache)
+            cache["len"] = jnp.where(active_mask, cache["len"], 0)
+            return toks, logits[:, -1], cache
+
+        self._decode = jax.jit(decode_rounds)
+
+        # live batch state: one dummy batched prefill fixes every pytree
+        # shape (and warms the compile); lengths start at zero
+        dummy = jnp.zeros((max_slots, self.prompt_len), jnp.int32)
+        logits, cache = self._prefill(params, {"tokens": dummy})
+        self._cache = dict(cache)
+        self._cache["len"] = jnp.zeros((max_slots,), jnp.int32)
+        self._logits = jnp.zeros_like(logits[:, -1])   # [B, Vpad]
+
+    def reset(self) -> None:
+        """Drop all queued/in-flight work; keep compiled fns and buffers."""
+
+        self._queue.clear()
+        for i, slot in enumerate(self._slots):
+            if slot.active:
+                self.allocator.free(slot.pages)
+                self._slots[i] = _Slot()
+        self._cache["len"] = jnp.zeros((self.max_slots,), jnp.int32)
+        self._logits = jnp.zeros_like(self._logits)
+        self.round = 0
+        self.peak_active = 0
+
+    # ------------------------------------------------------------------
+    # request interface
+    # ------------------------------------------------------------------
+
+    def submit(self, robot_id: int, qd: np.ndarray, tau: np.ndarray) -> None:
+        """Queue one chunk request for ``robot_id`` (qd/tau [1, N])."""
+
+        obs = np.concatenate(
+            [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
+        )[0]
+        self._queue.append(ChunkRequest(robot_id, obs, self.round))
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.active for s in self._slots)
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+
+    def _try_admit(self) -> None:
+        admit_mask = np.zeros(self.max_slots, bool)
+        obs_batch = np.zeros((self.max_slots, self.prompt_len), np.int64)
+        admitted = False
+        for i, slot in enumerate(self._slots):
+            if slot.active or not self._queue:
+                continue
+            if self.allocator.num_free < self.pages_per_req:
+                break  # KV pool exhausted: defer the rest of the queue
+            req = self._queue.popleft()
+            pages = self.allocator.alloc(self.pages_per_req)
+            self._slots[i] = _Slot(
+                robot_id=req.robot_id,
+                remaining=self.total_tokens,
+                pages=pages,
+                request=req,
+                admitted_round=self.round,
+                tokens=[],
+            )
+            admit_mask[i] = True
+            obs_batch[i] = req.obs
+            admitted = True
+        if admitted:
+            self._cache, self._logits = self._admit(
+                self.params,
+                self._cache,
+                self._logits,
+                jnp.asarray(obs_batch),
+                jnp.asarray(admit_mask),
+            )
+
+    def step(self) -> List[ChunkResult]:
+        """Admit pending requests, run one decode round, emit finished chunks."""
+
+        self.round += 1
+        self._try_admit()
+        active = np.asarray([s.active for s in self._slots])
+        self.peak_active = max(self.peak_active, int(active.sum()))
+        if not active.any():
+            return []
+        toks, self._logits, self._cache = self._decode(
+            self.params, self._logits, self._cache, jnp.asarray(active)
+        )
+        toks = np.asarray(toks)  # [B, decode_block] — one sync per round
+        done: List[ChunkResult] = []
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            take = min(slot.remaining, self.decode_block)
+            slot.tokens.extend(int(t) for t in toks[i, :take])
+            slot.remaining -= take
+            if slot.remaining == 0:
+                done.append(
+                    ChunkResult(
+                        robot_id=slot.robot_id,
+                        tokens=np.asarray(slot.tokens, np.int64),
+                        submitted_round=slot.request.submitted_round,
+                        admitted_round=slot.admitted_round,
+                        completed_round=self.round,
+                    )
+                )
+                # release this slot's KV pages back to the shared pool
+                self.allocator.free(slot.pages)
+                self._slots[i] = _Slot()
+        return done
+
+    def drain(self, max_rounds: int = 10_000) -> List[ChunkResult]:
+        """Run rounds until queue and slots are empty; return all results."""
+
+        out: List[ChunkResult] = []
+        rounds = 0
+        while (self._queue or self.n_active) and rounds < max_rounds:
+            out.extend(self.step())
+            rounds += 1
+        return out
