@@ -1,0 +1,99 @@
+"""Partition-planner sweep: every zoo architecture × network profile.
+
+For each of the 11 assigned architectures and each channel regime
+(LAN / WAN / congested), build the block-level inference graph, run the
+cut-point planner under the simulated RAPID trigger's offload fraction and
+a Jetson-class 8 GB edge budget, and record the chosen deployment against
+the two single-device anchors.  The planner is analytic (graph + calibrated
+latency model), so the full 33-cell sweep costs milliseconds.
+
+Emits the ``name,us_per_call,derived`` CSV contract and writes
+``BENCH_partition.json``; ``derived`` is the number of cells where a
+genuine SPLIT (layers on both sides) is optimal.
+
+    PYTHONPATH=src python benchmarks/partition_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _offload_fraction() -> float:
+    """The live kinematic trigger's simulated offload rate (arch-independent)."""
+
+    from repro.partition.planner import DEFAULT_OFFLOAD_FRACTION
+
+    try:
+        from repro.runtime.engine import evaluate_strategy
+
+        return float(evaluate_strategy("rapid")["offload_fraction"])
+    except Exception:
+        return DEFAULT_OFFLOAD_FRACTION
+
+
+def bench_rows(offload_fraction=None, out_path=None):
+    from repro.configs import ARCH_IDS, get_config
+    from repro.partition.graph import build_graph
+    from repro.partition.planner import NETWORK_PROFILES, plan_partition
+
+    if offload_fraction is None:
+        offload_fraction = _offload_fraction()
+
+    out = {"offload_fraction": round(offload_fraction, 4)}
+    rows = []
+    n_split = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        graph = build_graph(cfg)
+        cells = []
+        for profile, channel in NETWORK_PROFILES.items():
+            plan = plan_partition(
+                cfg, channel=channel,
+                offload_fraction=offload_fraction, graph=graph,
+            )
+            n_split += plan.mode == "split"
+            out[f"{arch}|{profile}"] = {
+                "mode": plan.mode,
+                "cut": plan.cut,
+                "cut_layer": plan.cut_layer,
+                "edge_gb": round(plan.edge_gb, 3),
+                "cloud_gb": round(plan.cloud_gb, 3),
+                "total_ms": round(plan.total_ms, 2),
+                "edge_ms": round(plan.edge_ms, 2),
+                "net_ms": round(plan.net_ms, 2),
+                "cloud_ms": round(plan.cloud_ms, 2),
+                "edge_only_ms": (
+                    round(plan.edge_only_ms, 2)
+                    if plan.edge_only_ms is not None else None
+                ),
+                "cloud_only_ms": (
+                    round(plan.cloud_only_ms, 2)
+                    if plan.cloud_only_ms is not None else None
+                ),
+            }
+            cells.append(f"{profile}:{plan.mode}@{plan.total_ms:.0f}ms")
+        rows.append(f"{arch}: " + " ".join(cells))
+
+    if out_path is None:
+        out_path = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "BENCH_partition.json")
+        )
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return rows, n_split
+
+
+def main():
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    rows, derived = bench_rows()
+    print(f"partition_planner_split_cells,{(time.time() - t0) * 1e6:.0f},{derived}")
+    for r in rows:
+        print("   ", r)
+
+
+if __name__ == "__main__":
+    main()

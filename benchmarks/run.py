@@ -38,6 +38,11 @@ def main(argv=None) -> None:
     from benchmarks import serving_bench
 
     _timed("serving_engine_speedup_8req", serving_bench.bench_rows, detail)
+
+    # partition planner: all architectures x network profiles (analytic)
+    from benchmarks import partition_bench
+
+    _timed("partition_planner_split_cells", partition_bench.bench_rows, detail)
     _timed("table1_vision_noise_degradation", tables.table1_vision_noise, detail)
     _timed("table3_simulation_speedup", tables.table3_simulation, detail)
     _timed("table4_realworld_speedup", tables.table4_real_world, detail)

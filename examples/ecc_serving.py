@@ -10,8 +10,14 @@ With ``--fleet N`` the same cloud engine serves N robots through the
 continuous-batching scheduler: dispatch triggers become requests that join
 in-flight decode batches, and chunks arrive back a few rounds later.
 
+With ``--partition auto`` the partition planner picks the
+compatibility-optimal edge-cloud cut for the full architecture and the
+episode is served through the split executor (edge prefix -> shipped cut
+activations -> cloud suffix) whenever the plan keeps layers on both sides.
+
     PYTHONPATH=src python examples/ecc_serving.py --task drawer_open
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4
+    PYTHONPATH=src python examples/ecc_serving.py --partition auto --network lan
 """
 
 import argparse
@@ -21,7 +27,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import EpisodeTokenizer
-from repro.launch.serve import CloudPolicy, serve_episode, serve_fleet
+from repro.launch.serve import build_policy, serve_episode, serve_fleet
 from repro.models.model import Model
 
 
@@ -33,6 +39,10 @@ def main(argv=None):
     p.add_argument("--steps", type=int, default=300)
     p.add_argument("--fleet", type=int, default=0,
                    help="serve N robots through the continuous-batching scheduler")
+    p.add_argument("--partition", default="none",
+                   help="'none', 'auto' (partition planner), or edge layer count")
+    p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
+                   help="channel regime the partition planner prices")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -42,18 +52,30 @@ def main(argv=None):
     tok = EpisodeTokenizer(cfg.vocab_size)
 
     if args.fleet:
+        if args.partition != "none":
+            raise SystemExit("--partition serves single-robot episodes; drop --fleet")
+        from repro.partition.planner import NETWORK_PROFILES
+
         out = serve_fleet(
-            model, params, tok, n_robots=args.fleet, max_steps=args.steps
+            model, params, tok, n_robots=args.fleet, max_steps=args.steps,
+            channel=NETWORK_PROFILES[args.network],
         )
         served = len(out["service_rounds"])
         print(f"chunks served: {served} (peak decode batch {out['peak_batch']})")
+        print(f"mean offload net: {np.mean(out['offload_ms']):.1f} ms (jittered)"
+              if out["offload_ms"] else "no offloads")
         print(f"actions executed: {out['actions'].shape}")
         return
 
-    policy = CloudPolicy(model, params, tok)
+    policy, _ = build_policy(
+        model, params, tok, args.arch, args.partition, args.network
+    )
     out = serve_episode(policy, task=args.task, max_steps=args.steps)
     frac = out["offloads"] / max(out["steps"] // 8, 1)
     print(f"offload fraction: {frac:.2f} of chunk decisions")
+    net_log = getattr(policy, "net_ms_log", None)
+    if net_log:
+        print(f"modeled channel cost: {np.mean(net_log):.1f} ms per offload")
     print(f"actions executed: {out['actions'].shape}")
 
 

@@ -144,10 +144,73 @@ class ModelConfig:
         return (i % self.moe.every) == (self.moe.every - 1)
 
     # --- parameter counting (for roofline MODEL_FLOPS = 6*N*D) ---------
-    def param_counts(self) -> dict:
-        """Returns dict with total and active (per-token) param counts."""
+    def block_param_counts(self, i: int) -> dict:
+        """Per-layer {total, active} param counts: the block itself, its
+        MLP/MoE, and (enc-dec stacks) the decoder cross-attention — the unit
+        of accounting the partition graph cuts between."""
+
         d, hd = self.d_model, self.resolved_head_dim
         nh, nkv = self.num_heads, self.num_kv_heads
+        blk = self.blocks[i]
+        if blk == "attn":
+            p = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+        elif blk == "mamba":
+            s = self.ssm or SSMConfig()
+            d_in = s.expand * d
+            dtr = s.dt_rank or -(-d // 16)
+            p = (
+                d * 2 * d_in  # in_proj (x and z)
+                + d_in * s.conv_width  # conv
+                + d_in * (dtr + 2 * s.state_dim)  # x_proj
+                + dtr * d_in  # dt_proj
+                + d_in * s.state_dim  # A (log)
+                + d_in  # D
+                + d_in * d  # out_proj
+            )
+        elif blk in ("slstm", "mlstm"):
+            x = self.xlstm or XLSTMConfig()
+            if blk == "mlstm":
+                # up-proj (x & z branches), q/k/v over inner dim, out-proj
+                d_in = int(x.proj_factor_mlstm * d)
+                p = d * 2 * d_in + 3 * d_in * d_in + d_in * d
+            else:
+                # sLSTM: 4 gates, each with input + recurrent weights,
+                # followed by a GLU-style up/down projection
+                d_up = int(x.proj_factor_slstm * d)
+                p = 8 * d * d + 2 * d * d_up
+        else:
+            raise ValueError(blk)
+        if self.encoder_decoder:
+            # decoder cross-attention rides every decoder layer
+            p += d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+        # MLP is present on a layer iff d_ff > 0 (jamba: MoE MLP on mamba
+        # layers too; xlstm: d_ff == 0, no MLP).
+        mlp_active = mlp_total = 0
+        if self.d_ff > 0:
+            if self.is_moe_layer(i):
+                m = self.moe
+                per_exp = (3 if self.gated_mlp else 2) * d * self.d_ff
+                mlp_total = m.num_experts * per_exp + d * m.num_experts
+                mlp_active = m.num_experts_per_tok * per_exp + d * m.num_experts
+            else:
+                mlp_total = mlp_active = (3 if self.gated_mlp else 2) * d * self.d_ff
+        return {"total": p + mlp_total, "active": p + mlp_active}
+
+    def encoder_param_counts(self) -> int:
+        """Encoder-stack params (enc-dec only; 0 otherwise)."""
+
+        if not self.encoder_decoder:
+            return 0
+        d, hd = self.d_model, self.resolved_head_dim
+        nh, nkv = self.num_heads, self.num_kv_heads
+        return self.num_encoder_layers * (
+            d * (nh * hd) * 2 + 2 * d * (nkv * hd) * 1
+            + (2 if not self.gated_mlp else 3) * d * self.d_ff
+        )
+
+    def param_counts(self) -> dict:
+        """Returns dict with total and active (per-token) param counts."""
+        d = self.d_model
         total = 0
         active = 0
         emb = self.vocab_size * d
@@ -157,57 +220,14 @@ class ModelConfig:
         head = 0 if self.tie_embeddings else self.vocab_size * d
         total += head
         active += self.vocab_size * d  # logits matmul always runs
-        for i, blk in enumerate(self.blocks):
-            if blk == "attn":
-                p = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
-            elif blk == "mamba":
-                s = self.ssm or SSMConfig()
-                d_in = s.expand * d
-                dtr = s.dt_rank or -(-d // 16)
-                p = (
-                    d * 2 * d_in  # in_proj (x and z)
-                    + d_in * s.conv_width  # conv
-                    + d_in * (dtr + 2 * s.state_dim)  # x_proj
-                    + dtr * d_in  # dt_proj
-                    + d_in * s.state_dim  # A (log)
-                    + d_in  # D
-                    + d_in * d  # out_proj
-                )
-            elif blk in ("slstm", "mlstm"):
-                x = self.xlstm or XLSTMConfig()
-                if blk == "mlstm":
-                    # up-proj (x & z branches), q/k/v over inner dim, out-proj
-                    d_in = int(x.proj_factor_mlstm * d)
-                    p = d * 2 * d_in + 3 * d_in * d_in + d_in * d
-                else:
-                    # sLSTM: 4 gates, each with input + recurrent weights,
-                    # followed by a GLU-style up/down projection
-                    d_up = int(x.proj_factor_slstm * d)
-                    p = 8 * d * d + 2 * d * d_up
-            else:
-                raise ValueError(blk)
-            # MLP is present on a layer iff d_ff > 0 (jamba: MoE MLP on mamba
-            # layers too; xlstm: d_ff == 0, no MLP).
-            mlp_active = mlp_total = 0
-            if self.d_ff > 0:
-                if self.is_moe_layer(i):
-                    m = self.moe
-                    per_exp = (3 if self.gated_mlp else 2) * d * self.d_ff
-                    mlp_total = m.num_experts * per_exp + d * m.num_experts
-                    mlp_active = m.num_experts_per_tok * per_exp + d * m.num_experts
-                else:
-                    mlp_total = mlp_active = (3 if self.gated_mlp else 2) * d * self.d_ff
-            total += p + mlp_total
-            active += p + mlp_active
+        for i in range(len(self.blocks)):
+            c = self.block_param_counts(i)
+            total += c["total"]
+            active += c["active"]
         if self.encoder_decoder:
-            # encoder layers: self-attn + mlp, plus decoder cross-attn
-            enc = self.num_encoder_layers * (
-                d * (nh * hd) * 2 + 2 * d * (nkv * hd) * 1
-                + (2 if not self.gated_mlp else 3) * d * self.d_ff
-            )
-            cross = self.num_layers * (d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d)
-            total += enc + cross
-            active += enc + cross
+            enc = self.encoder_param_counts()
+            total += enc
+            active += enc
         return {"total": total, "active": active}
 
     def replace(self, **kw) -> "ModelConfig":

@@ -14,6 +14,10 @@ Two serving modes:
     continuous-batching scheduler (``runtime/scheduler.py``): dispatch
     triggers become requests that join in-flight decode batches, and chunks
     arrive back asynchronously a few scheduler rounds later.
+
+``--partition auto`` plans the compatibility-optimal edge-cloud cut for the
+full architecture (``repro.partition``) and serves the episode through the
+split executor when the plan keeps layers on both sides.
 """
 
 from __future__ import annotations
@@ -26,12 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.core.dispatcher import DispatcherConfig, dispatcher_init, dispatcher_step
 from repro.core.kinematics import KinematicFrame
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
 from repro.robotics.episodes import generate_episode
+from repro.runtime.channel import ChannelConfig, sample_latency_ms
 
 
 class CloudPolicy:
@@ -148,6 +153,7 @@ def serve_fleet(
     n_joints: int = 7,
     max_steps: int = 300,
     max_slots: int = 8,
+    channel: Optional[ChannelConfig] = None,
     verbose: bool = True,
 ):
     """A robot fleet served by one continuous-batching cloud engine.
@@ -182,6 +188,10 @@ def serve_fleet(
     n_off = np.zeros(n_robots, np.int64)
     wait_rounds: List[int] = []
     in_flight = set()
+    # stochastic channel: every completed offload draws a jittered latency
+    channel = channel or ChannelConfig()
+    net_key = jax.random.PRNGKey(seed + 7919)
+    offload_ms: List[float] = []
 
     for t in range(t_len):
         frame = KinematicFrame(
@@ -203,21 +213,78 @@ def serve_fleet(
             ).reshape(chunk_len, n_joints)
             in_flight.discard(res.robot_id)
             wait_rounds.append(res.completed_round - res.submitted_round)
+            offload_ms.append(
+                sample_latency_ms(
+                    channel, chunk_len, jax.random.fold_in(net_key, len(offload_ms))
+                )
+            )
         actions[t] = np.asarray(out.action)
 
     if verbose:
         print(
             f"fleet={n_robots} steps={t_len} offloads={int(n_off.sum())} "
             f"mean_service_rounds={np.mean(wait_rounds) if wait_rounds else 0:.1f} "
-            f"peak_batch={sched.peak_active}"
+            f"peak_batch={sched.peak_active} "
+            f"net_ms={np.mean(offload_ms) if offload_ms else 0:.1f}"
+            f"±{np.std(offload_ms) if offload_ms else 0:.1f}"
         )
     return {
         "offloads": n_off,
         "steps": t_len,
         "actions": actions,
         "service_rounds": wait_rounds,
+        "offload_ms": offload_ms,
         "peak_batch": sched.peak_active,
     }
+
+
+def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
+                 partition: str = "none", network: str = "wan",
+                 verbose: bool = True):
+    """Build the serving policy, optionally split per the partition planner.
+
+    ``partition``: ``"none"`` (single-device CloudPolicy), ``"auto"`` (plan
+    the compatibility-optimal cut for the FULL ``arch`` config and map its
+    layer fraction onto this — possibly smoke-scale — model), or an integer
+    edge layer count for an explicit split.  ``network`` picks the channel
+    regime the planner prices (``lan`` / ``wan`` / ``congested``).
+    """
+
+    if partition == "none":
+        return CloudPolicy(model, params, tok), None
+
+    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+    from repro.partition.planner import NETWORK_PROFILES, plan_partition
+
+    cfg = model.cfg
+    channel = NETWORK_PROFILES[network]
+    full_cfg = get_config(arch)
+    plan = plan_partition(full_cfg, channel=channel)
+    if verbose:
+        print(f"partition plan [{network}]:", plan.summary())
+    if partition == "auto":
+        # only a genuine split runs through the executor: cloud-only and
+        # edge-only are single-device plans (and the executor's ping-pong
+        # decode would misprice them), enc-dec stacks aren't splittable yet
+        if plan.mode != "split" or cfg.encoder_decoder:
+            if verbose:
+                why = (
+                    "encoder-decoder split execution not supported"
+                    if plan.mode == "split"
+                    else f"planner chose {plan.mode}"
+                )
+                print(f"{why}: serving unpartitioned")
+            return CloudPolicy(model, params, tok), plan
+        # node cut 1 (stem-only edge) maps to layer cut 0: the smoke model
+        # still splits — embedding on the edge, every layer in the cloud
+        frac = plan.cut_layer / max(full_cfg.num_layers, 1)
+        cut = int(round(frac * cfg.num_layers))
+    else:
+        cut = int(partition)
+    executor = PartitionExecutor(model, params, cut, channel=channel)
+    if verbose:
+        print(f"split execution: {cut}/{cfg.num_layers} layers on the edge")
+    return PartitionedPolicy(executor, tok), plan
 
 
 def main(argv=None):
@@ -227,6 +294,10 @@ def main(argv=None):
     p.add_argument("--steps", type=int, default=300)
     p.add_argument("--fleet", type=int, default=0,
                    help="serve N robots through the continuous-batching scheduler")
+    p.add_argument("--partition", default="none",
+                   help="'none', 'auto' (partition planner), or edge layer count")
+    p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
+                   help="channel regime the partition planner prices")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -234,8 +305,10 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
     if args.fleet:
+        if args.partition != "none":
+            raise SystemExit("--partition serves single-robot episodes; drop --fleet")
         return serve_fleet(model, params, tok, n_robots=args.fleet, max_steps=args.steps)
-    policy = CloudPolicy(model, params, tok)
+    policy, _ = build_policy(model, params, tok, args.arch, args.partition, args.network)
     return serve_episode(policy, task=args.task, max_steps=args.steps)
 
 

@@ -1,0 +1,36 @@
+"""Compatibility-optimal edge-cloud partitioning (RAPID pillar 2).
+
+Three layers:
+  * ``graph``    — lower a ``ModelConfig`` into a linear block-level
+    inference graph: per block, resident/executed bytes, FLOPs, decode HBM
+    traffic, and the activation size at every cut point.
+  * ``planner``  — enumerate cut points against a ``HardwareModel`` +
+    ``ChannelConfig`` + the trigger's offload fraction, under edge/cloud
+    memory budgets, returning a serializable ``PartitionPlan``.
+  * ``executor`` — split ``Model`` params at the planned layer boundary and
+    run the split forward / split serving path, numerically identical to the
+    unpartitioned model.
+"""
+
+from repro.partition.graph import BlockNode, InferenceGraph, build_graph
+from repro.partition.planner import (
+    NETWORK_PROFILES,
+    CutEval,
+    PartitionPlan,
+    enumerate_cuts,
+    plan_partition,
+)
+from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+
+__all__ = [
+    "BlockNode",
+    "InferenceGraph",
+    "build_graph",
+    "NETWORK_PROFILES",
+    "CutEval",
+    "PartitionPlan",
+    "enumerate_cuts",
+    "plan_partition",
+    "PartitionExecutor",
+    "PartitionedPolicy",
+]

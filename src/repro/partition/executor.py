@@ -1,0 +1,249 @@
+"""Split execution of a planned partition: edge prefix / cloud suffix.
+
+``PartitionExecutor`` slices a ``Model``'s stacked per-unit parameters at a
+layer boundary and runs the two halves as they would deploy:
+
+  * the EDGE side owns the stem (embedding + modality projector) and the
+    first ``cut_layer`` transformer layers; its prefill emits the cut
+    activations that would ship over the channel;
+  * the CLOUD side owns the remaining layers, the final norm, and the LM
+    head; it finishes prefill and drives the action-chunk decode.
+
+Decode ping-pongs per token (the suffix owner samples, the prefix owner
+embeds), exactly the round-trip the planner prices.  Both phases run the
+same ``Model._block_seq`` / ``Model._block_step`` kernels as the fused
+single-device path, so the split forward is numerically identical to the
+unpartitioned model — the property ``tests/test_partition.py`` pins.
+
+``PartitionedPolicy`` is a drop-in ``CloudPolicy``: same observation-in /
+action-chunk-out interface, plus modeled channel telemetry per call.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import EpisodeTokenizer
+from repro.models.layers import embed_lookup, rms_norm
+from repro.models.model import Model
+from repro.partition.planner import interior_net_ms
+from repro.runtime.channel import ChannelConfig
+
+
+class PartitionExecutor:
+    """Run ``model`` split after ``cut_layer`` transformer layers."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        cut_layer: int,
+        channel: Optional[ChannelConfig] = None,
+    ):
+        cfg = model.cfg
+        if cfg.encoder_decoder:
+            raise NotImplementedError("split execution targets decoder-only stacks")
+        if not 0 <= cut_layer <= cfg.num_layers:
+            raise ValueError(f"cut_layer {cut_layer} outside [0, {cfg.num_layers}]")
+        self.model = model
+        self.cfg = cfg
+        self.cut_layer = cut_layer
+        self.channel = channel or ChannelConfig()
+        self.shipped_bytes = 0.0
+
+        # per-layer params with the stacked repeats dim sliced out
+        per_layer = []
+        for i in range(cfg.num_layers):
+            j, r = i % model.period, i // model.period
+            per_layer.append(jax.tree.map(lambda a: a[r], params["unit"][j]))
+        sp: Dict[str, Any] = {
+            "embed": params["embed"],
+            "final_norm": params["final_norm"],
+            "edge": tuple(per_layer[:cut_layer]),
+            "cloud": tuple(per_layer[cut_layer:]),
+        }
+        if "mod_proj" in params:
+            sp["mod_proj"] = params["mod_proj"]
+        if "lm_head" in params:
+            sp["lm_head"] = params["lm_head"]
+        self.split_params = sp
+        self.edge_specs = model.specs[:cut_layer]
+        self.cloud_specs = model.specs[cut_layer:]
+
+    # ------------------------------------------------------------------
+    # full-sequence split forward (the parity surface)
+    # ------------------------------------------------------------------
+
+    def _run_side(self, specs, layer_params, x, positions):
+        dummy = {"_": jnp.zeros((), jnp.float32)}
+        for spec, p in zip(specs, layer_params):
+            x, _, _ = self.model._block_seq(spec, p, x, positions, dummy)
+        return x
+
+    def edge_forward(self, batch) -> Tuple[jax.Array, jax.Array]:
+        """Stem + edge prefix -> (cut activations [B,S,D], positions)."""
+
+        x = self.model._embed_inputs(self.split_params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._run_side(self.edge_specs, self.split_params["edge"], x, positions)
+        return x, positions
+
+    def cloud_forward(self, x, positions) -> jax.Array:
+        """Cloud suffix + final norm -> hidden [B,S,D]."""
+
+        x = self._run_side(self.cloud_specs, self.split_params["cloud"], x, positions)
+        return rms_norm(x, self.split_params["final_norm"], self.cfg.norm_eps)
+
+    def forward(self, batch) -> jax.Array:
+        """End-to-end split forward; equals ``Model.forward``'s hidden."""
+
+        x, positions = self.edge_forward(batch)
+        self.shipped_bytes += float(np.prod(x.shape)) * x.dtype.itemsize
+        return self.cloud_forward(x, positions)
+
+    def logits(self, x) -> jax.Array:
+        return self.model._logits(self.split_params, x)
+
+    # ------------------------------------------------------------------
+    # split serving path (prefill + fused ping-pong decode)
+    # ------------------------------------------------------------------
+
+    def _init_side_caches(self, specs, batch: int, seq: int):
+        caches = []
+        for spec in specs:
+            c = self.model._init_block_cache(spec, batch, seq)
+            caches.append(jax.tree.map(lambda a: a[0], c))
+        return caches
+
+    def split_prefill(self, sp, batch, extra: int):
+        """Both halves prefill their own caches -> (logits [B,1,V], state)."""
+
+        b = batch["tokens"].shape[0]
+        s = self.model._total_seq(batch)
+        x = self.model._embed_inputs(sp, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def run(specs, layer_params, caches, x):
+            new = []
+            for spec, p, c in zip(specs, layer_params, caches):
+                x, nc, _ = self.model._block_seq(spec, p, x, positions, c)
+                new.append(nc)
+            return x, new
+
+        edge_caches = self._init_side_caches(self.edge_specs, b, s + extra)
+        cloud_caches = self._init_side_caches(self.cloud_specs, b, s + extra)
+        x, edge_caches = run(self.edge_specs, sp["edge"], edge_caches, x)
+        x, cloud_caches = run(self.cloud_specs, sp["cloud"], cloud_caches, x)
+        x = rms_norm(x, sp["final_norm"], self.cfg.norm_eps)
+        logits = self.model._logits(sp, x[:, -1:])
+        state = {
+            "edge": edge_caches,
+            "cloud": cloud_caches,
+            "len": jnp.asarray(s, jnp.int32),
+        }
+        return logits, state
+
+    def split_decode_step(self, sp, token, state):
+        """One ping-pong: edge embeds+runs prefix, cloud finishes + samples."""
+
+        cfg = self.cfg
+        x = embed_lookup(token, sp["embed"], cfg.d_model, cfg.scale_embeddings)
+        x = x.astype(self.model.dtype)
+
+        def run(specs, layer_params, caches, x):
+            new = []
+            for spec, p, c in zip(specs, layer_params, caches):
+                x, nc = self.model._block_step(spec, p, x, c, state["len"])
+                new.append(nc)
+            return x, new
+
+        x, edge_caches = run(self.edge_specs, sp["edge"], state["edge"], x)
+        x, cloud_caches = run(self.cloud_specs, sp["cloud"], state["cloud"], x)
+        x = rms_norm(x, sp["final_norm"], cfg.norm_eps)
+        logits = self.model._logits(sp, x)
+        new_state = {
+            "edge": edge_caches,
+            "cloud": cloud_caches,
+            "len": state["len"] + 1,
+        }
+        return logits, new_state
+
+    def split_decode_chunk(self, sp, logits, state, n_steps: int, token_floor: int = 0):
+        """Fused greedy split decode (mirrors ``Model.decode_chunk``)."""
+
+        def step(carry, _):
+            logits, st = carry
+            ls = logits[:, -1]
+            if token_floor:
+                ls = ls.at[..., :token_floor].set(-1e9)
+            tok = jnp.argmax(ls, axis=-1)[:, None]
+            logits, st = self.split_decode_step(sp, tok, st)
+            return (logits, st), tok[:, 0]
+
+        (logits, state), toks = jax.lax.scan(
+            step, (logits, state), None, length=n_steps
+        )
+        return jnp.moveaxis(toks, 0, 1), logits, state
+
+    # ------------------------------------------------------------------
+    # channel telemetry
+    # ------------------------------------------------------------------
+
+    def modeled_net_ms(self, prompt_len: int, n_decode: int) -> Dict[str, float]:
+        """Channel cost of one split serving call (prefill ship + ping-pong).
+
+        Zero when a side is empty in the LAYER dimension only if the stem /
+        head still separate — the stem is always edge-resident here, so
+        every call ships at least the embedded prompt.
+        """
+
+        act_tok = self.cfg.d_model * 2.0  # bf16 activations
+        return interior_net_ms(self.channel, prompt_len * act_tok, act_tok, n_decode)
+
+
+class PartitionedPolicy:
+    """Drop-in ``CloudPolicy`` serving through a split model.
+
+    Same observation-in / action-chunk-out contract; additionally records
+    the modeled channel milliseconds of every call in ``net_ms_log``.
+    """
+
+    def __init__(
+        self,
+        executor: PartitionExecutor,
+        tokenizer: EpisodeTokenizer,
+        chunk_len: int = 8,
+        n_joints: int = 7,
+    ):
+        self.executor = executor
+        self.tok = tokenizer
+        self.chunk_len = chunk_len
+        self.n_joints = n_joints
+        self.net_ms_log: List[float] = []
+        n_steps = chunk_len * n_joints
+        self._n_steps = n_steps
+        self._prefill = jax.jit(
+            lambda sp, b: executor.split_prefill(sp, b, extra=n_steps)
+        )
+        self._decode_chunk = jax.jit(
+            lambda sp, logits, st: executor.split_decode_chunk(
+                sp, logits, st, n_steps, tokenizer.action_base
+            )[0]
+        )
+
+    def __call__(self, qd: np.ndarray, tau: np.ndarray) -> np.ndarray:
+        obs = np.concatenate(
+            [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
+        )
+        batch = {"tokens": jnp.asarray(obs)}
+        sp = self.executor.split_params
+        logits, state = self._prefill(sp, batch)
+        toks = np.asarray(self._decode_chunk(sp, logits, state))
+        self.net_ms_log.append(
+            self.executor.modeled_net_ms(obs.shape[1], self._n_steps)["total_ms"]
+        )
+        return self.tok.decode_action(toks).reshape(-1, self.chunk_len, self.n_joints)

@@ -1,0 +1,189 @@
+"""Linear block-level inference graph for partition planning.
+
+Lowering: a ``ModelConfig`` becomes ``[stem] + [layer_0 .. layer_{L-1}] +
+[head]``.  Every node carries the four quantities the planner trades off:
+
+  * ``param_bytes``  — bf16 bytes RESIDENT on whichever side holds the node
+    (MoE: all experts; tied embeddings: counted once, at the stem);
+  * ``exec_bytes``   — bytes actually TOUCHED per action-chunk inference
+    (MoE: router + top-k experts only; embedding: the rows looked up, not
+    the table — this is what makes the planner *compatibility*-aware: a
+    235B-total/22B-active MoE partitions completely differently from a
+    dense 9B even at equal resident size);
+  * ``flops_prefill`` / ``flops_decode`` — executed FLOPs from the analytic
+    roofline cost model (``roofline/costmodel.block_flops``);
+  * ``hbm_bytes_decode`` — KV/state traffic per decode step;
+  * ``cut_act_bytes`` — activation bytes PER TOKEN shipped over the channel
+    if the graph is cut immediately after this node (d_model @ bf16 for
+    every interior cut; cut 0 — nothing on the edge — is instead priced by
+    the planner as a raw-observation upload via the channel's ``obs_bytes``).
+
+Block families covered: attention (MHA/GQA, windowed), MoE MLPs, Mamba/SSM,
+xLSTM (sLSTM/mLSTM), the vision/audio stem projector, the encoder stack
+(enc-dec models, folded into the stem), and the LM head.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+BYTES_PER_PARAM = 2.0  # bf16 residency, matching the latency model's GB
+
+# serving shapes: one observation (proprioceptive state tokens + any
+# modality-frontend tokens) in, one k-step action chunk out
+DEFAULT_STATE_TOKENS = 14   # 2 x 7 joint qd/tau bins (EpisodeTokenizer)
+DEFAULT_CHUNK_TOKENS = 56   # 8-step chunk x 7 joints
+
+
+@dataclass(frozen=True)
+class BlockNode:
+    index: int                  # position in the linear graph
+    kind: str                   # stem | attn | mamba | mlstm | slstm | head
+    layer: Optional[int]        # model layer index (None for stem/head)
+    is_moe: bool
+    param_bytes: float          # resident bytes on the owning side
+    exec_bytes: float           # bytes touched per chunk inference
+    flops_prefill: float        # executed FLOPs over the prompt
+    flops_decode: float         # executed FLOPs per decode token
+    hbm_bytes_decode: float     # cache/state traffic per decode step
+    cut_act_bytes: float        # activation bytes/token if cut after this node
+
+
+@dataclass(frozen=True)
+class InferenceGraph:
+    arch: str
+    nodes: Tuple[BlockNode, ...]
+    prompt_len: int             # observation tokens entering the stack
+    chunk_tokens: int           # autoregressive action tokens per chunk
+    d_model: int
+    tie_embeddings: bool
+    embed_bytes: float          # table bytes (tied-embedding duplication)
+
+    @property
+    def n_cuts(self) -> int:
+        """Valid cut indices are 0..len(nodes): nodes[:c] live on the edge."""
+
+        return len(self.nodes) + 1
+
+    @property
+    def total_param_bytes(self) -> float:
+        return sum(n.param_bytes for n in self.nodes)
+
+    @property
+    def total_exec_bytes(self) -> float:
+        return sum(n.exec_bytes for n in self.nodes)
+
+    def cut_layers(self, cut: int) -> int:
+        """Transformer layers resident on the edge for node-cut ``cut``."""
+
+        return min(max(cut - 1, 0), len(self.nodes) - 2)
+
+
+def build_graph(
+    cfg: ModelConfig,
+    prompt_len: Optional[int] = None,
+    chunk_tokens: int = DEFAULT_CHUNK_TOKENS,
+) -> InferenceGraph:
+    """Lower ``cfg`` into the linear partition graph.
+
+    ``prompt_len`` defaults to the VLA serving observation: state tokens plus
+    any modality-frontend tokens (vision patches ride the prompt on VLM
+    configs, so cutting after the stem ships patch activations, not pixels).
+    """
+
+    from repro.models.model import layer_specs
+    from repro.roofline.costmodel import (
+        block_decode_bytes,
+        block_flops,
+        encoder_flops,
+        head_flops,
+    )
+
+    d = cfg.d_model
+    if prompt_len is None:
+        prompt_len = DEFAULT_STATE_TOKENS + (
+            cfg.num_modality_tokens if cfg.modality != "text" else 0
+        )
+    kv_len = prompt_len + chunk_tokens
+    act_tok = d * BYTES_PER_PARAM  # bf16 activations at every layer boundary
+
+    emb_bytes = cfg.vocab_size * d * BYTES_PER_PARAM
+    nodes = []
+
+    # --- stem: embedding table, modality projector, encoder stack ---------
+    stem_param = emb_bytes
+    stem_exec = kv_len * d * BYTES_PER_PARAM  # rows looked up, not the table
+    stem_flops_prefill = 0.0
+    if cfg.modality != "text" and not cfg.encoder_decoder:
+        stem_param += d * d * BYTES_PER_PARAM
+        stem_exec += d * d * BYTES_PER_PARAM
+        stem_flops_prefill += 2.0 * cfg.num_modality_tokens * d * d
+    if cfg.encoder_decoder:
+        enc_bytes = cfg.encoder_param_counts() * BYTES_PER_PARAM
+        stem_param += enc_bytes
+        stem_exec += enc_bytes
+        stem_flops_prefill += encoder_flops(cfg, 1, prompt_len)
+    nodes.append(
+        BlockNode(
+            index=0,
+            kind="stem",
+            layer=None,
+            is_moe=False,
+            param_bytes=stem_param,
+            exec_bytes=stem_exec,
+            flops_prefill=stem_flops_prefill,
+            flops_decode=0.0,
+            hbm_bytes_decode=0.0,
+            cut_act_bytes=act_tok,
+        )
+    )
+
+    # --- transformer layers ------------------------------------------------
+    for i, spec in enumerate(layer_specs(cfg)):
+        counts = cfg.block_param_counts(i)
+        nodes.append(
+            BlockNode(
+                index=i + 1,
+                kind=spec[0],
+                layer=i,
+                is_moe=spec[1],
+                param_bytes=counts["total"] * BYTES_PER_PARAM,
+                exec_bytes=counts["active"] * BYTES_PER_PARAM,
+                flops_prefill=block_flops(cfg, spec, 1, prompt_len),
+                flops_decode=block_flops(cfg, spec, 1, 1, decode=True, kv_len=kv_len),
+                hbm_bytes_decode=block_decode_bytes(cfg, spec, 1, kv_len),
+                cut_act_bytes=act_tok,
+            )
+        )
+
+    # --- LM head (tied embeddings: table resident at the stem, but the
+    # logits matmul still reads it — exec counts it on whichever side holds
+    # the head; the planner duplicates the table when the cut separates them)
+    head_param = 0.0 if cfg.tie_embeddings else emb_bytes
+    nodes.append(
+        BlockNode(
+            index=len(nodes),
+            kind="head",
+            layer=None,
+            is_moe=False,
+            param_bytes=head_param,
+            exec_bytes=emb_bytes,
+            flops_prefill=head_flops(cfg, 1, prompt_len),
+            flops_decode=head_flops(cfg, 1, 1, decode=True),
+            hbm_bytes_decode=emb_bytes,
+            cut_act_bytes=act_tok,
+        )
+    )
+
+    return InferenceGraph(
+        arch=cfg.name,
+        nodes=tuple(nodes),
+        prompt_len=prompt_len,
+        chunk_tokens=chunk_tokens,
+        d_model=d,
+        tie_embeddings=cfg.tie_embeddings,
+        embed_bytes=emb_bytes,
+    )

@@ -1,0 +1,291 @@
+"""Compatibility-optimal cut-point search over the partition graph.
+
+The planner enumerates every cut of the linear block graph (prefix sums make
+the sweep O(N) — the "DP" degenerates to a scan because the graph is a
+chain) and scores the *expected per-action-chunk latency* under:
+
+  * the calibrated ``HardwareModel`` (ms per executed GB on each side, the
+    quadratic cloud-span term),
+  * a ``ChannelConfig`` network (cut-activation shipping for prefill, a
+    per-token ping-pong for split decode, the paper's observation payload
+    for the cloud-only cut),
+  * the trigger's offload fraction ``f`` — the edge prefix runs every chunk
+    (it IS the redundancy monitor's substrate), the cloud suffix only on the
+    fraction of chunks the trigger actually offloads.  A cut at 0 (nothing
+    resident on the edge) forces ``f = 1``: with no edge model there is no
+    cached-chunk fallback, every chunk must be fetched — the compatibility
+    constraint that makes cloud-only a *different regime*, not just a limit.
+
+Cut semantics: ``cut == c`` puts ``nodes[:c]`` on the edge. ``c == 0`` is
+cloud-only, ``c == len(nodes)`` is edge-only, both always enumerated — so
+the chosen plan is never worse than either single-device deployment (among
+feasible ones).
+
+Memory feasibility: resident (not executed) bytes against per-side budgets;
+tied-embedding models double-count the table when the cut separates the
+lookup from the logits matmul.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.partition.graph import InferenceGraph, build_graph
+from repro.runtime.channel import ChannelConfig, query_latency_ms, ship_ms
+from repro.runtime.latency import HardwareModel, arch_hardware_model
+
+# the simulated RAPID kinematic trigger's offload rate on the episode suite
+# (architecture-independent — the trigger reads sensors, not activations);
+# benchmarks/partition_bench.py re-derives it from the live trigger sim
+DEFAULT_OFFLOAD_FRACTION = 0.31
+
+# deployment-class defaults: a Jetson-class edge box, an effectively
+# unbounded cloud pool
+DEFAULT_EDGE_MEM_GB = 8.0
+
+TOKEN_ID_BYTES = 4.0  # ping-pong downlink payload: one sampled token id
+
+NETWORK_PROFILES: Dict[str, ChannelConfig] = {
+    "lan": ChannelConfig(rtt_ms=1.0, uplink_mbps=1000.0, downlink_mbps=1000.0,
+                         jitter_ms=0.2),
+    "wan": ChannelConfig(),  # the paper's serving setup (8 ms RTT, 200/400)
+    "congested": ChannelConfig(rtt_ms=40.0, uplink_mbps=20.0,
+                               downlink_mbps=50.0, jitter_ms=12.0),
+}
+
+
+def interior_net_ms(
+    channel: ChannelConfig,
+    prompt_act_bytes: float,
+    tok_act_bytes: float,
+    n_decode_tokens: int,
+) -> Dict[str, float]:
+    """Network cost of an interior cut, decomposed.
+
+    Prefill: one uplink shipping the cut activations of the whole prompt.
+    Decode: the suffix owner holds the LM head, the prefix owner the
+    embedding, so every action token ping-pongs — cut activation up, sampled
+    token id down, one RTT each — which is exactly why interior cuts win on
+    LAN and lose on WAN.
+    """
+
+    prefill = channel.rtt_ms + ship_ms(prompt_act_bytes, channel.uplink_mbps)
+    per_tok = (
+        channel.rtt_ms
+        + ship_ms(tok_act_bytes, channel.uplink_mbps)
+        + ship_ms(TOKEN_ID_BYTES, channel.downlink_mbps)
+    )
+    return {
+        "prefill_ms": prefill,
+        "per_token_ms": per_tok,
+        "total_ms": prefill + n_decode_tokens * per_tok,
+    }
+
+
+@dataclass(frozen=True)
+class CutEval:
+    """One scored cut point."""
+
+    cut: int
+    feasible: bool
+    edge_gb: float          # resident
+    cloud_gb: float         # resident (0 when the cut never offloads)
+    edge_exec_gb: float
+    cloud_exec_gb: float
+    offload_fraction: float  # effective (forced to 1.0 at cut 0, 0.0 at N)
+    edge_ms: float
+    cloud_ms: float
+    net_ms: float
+    total_ms: float          # expected per-chunk: edge + f*(net + cloud)
+
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """Serializable deployment plan: where to cut, what it costs."""
+
+    arch: str
+    cut: int                 # node-space cut (nodes[:cut] on the edge)
+    cut_layer: int           # transformer layers resident on the edge
+    n_nodes: int
+    mode: str                # cloud_only | edge_only | split
+    edge_gb: float
+    cloud_gb: float
+    edge_exec_gb: float
+    cloud_exec_gb: float
+    offload_fraction: float
+    edge_ms: float
+    cloud_ms: float
+    net_ms: float
+    total_ms: float
+    edge_only_ms: Optional[float]   # None when the edge budget can't hold it
+    cloud_only_ms: Optional[float]
+    prompt_len: int
+    chunk_tokens: int
+    edge_mem_gb: float
+    channel: Dict[str, float] = field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PartitionPlan":
+        return cls(**json.loads(s))
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch}: {self.mode} cut={self.cut}/{self.n_nodes} "
+            f"({self.cut_layer} layers on edge) edge={self.edge_gb:.2f}GB "
+            f"cloud={self.cloud_gb:.2f}GB f_off={self.offload_fraction:.2f} "
+            f"-> {self.total_ms:.1f}ms "
+            f"(edge {self.edge_ms:.1f} + net {self.net_ms:.1f} "
+            f"+ cloud {self.cloud_ms:.1f}; "
+            f"edge-only {self.edge_only_ms and round(self.edge_only_ms, 1)}, "
+            f"cloud-only {self.cloud_only_ms and round(self.cloud_only_ms, 1)})"
+        )
+
+
+def enumerate_cuts(
+    graph: InferenceGraph,
+    hw: HardwareModel,
+    channel: Optional[ChannelConfig] = None,
+    *,
+    offload_fraction: float = DEFAULT_OFFLOAD_FRACTION,
+    edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
+    cloud_mem_gb: float = float("inf"),
+) -> List[CutEval]:
+    """Score every cut of ``graph`` under ``hw`` + ``channel``."""
+
+    channel = channel or hw.channel
+    n = len(graph.nodes)
+    # normalize graph bytes so the resident total matches the hardware
+    # model's calibrated full_model_gb (the paper's 14.2 GB includes the
+    # vision stack our stub under-counts; per-arch models scale by 1.0)
+    scale = hw.full_model_gb / (graph.total_param_bytes / 1e9)
+
+    res = [nd.param_bytes * scale / 1e9 for nd in graph.nodes]
+    exe = [nd.exec_bytes * scale / 1e9 for nd in graph.nodes]
+    evals: List[CutEval] = []
+    for cut in range(n + 1):
+        edge_gb = sum(res[:cut])
+        cloud_gb = sum(res[cut:])
+        edge_exec = sum(exe[:cut])
+        cloud_exec = sum(exe[cut:])
+        if graph.tie_embeddings and 0 < cut < n:
+            # the suffix's logits matmul needs the embedding table too
+            cloud_gb += graph.embed_bytes * scale / 1e9
+
+        if cut == 0:
+            f_eff = 1.0
+        elif cut == n:
+            f_eff, cloud_gb, cloud_exec = 0.0, 0.0, 0.0
+        else:
+            f_eff = offload_fraction
+
+        if cut == n:
+            net = 0.0
+        elif cut == 0:
+            # raw observation payload, the paper's cloud-query shape
+            net = query_latency_ms(channel, hw.chunk_len)
+        else:
+            act_tok = graph.nodes[cut - 1].cut_act_bytes
+            net = interior_net_ms(
+                channel,
+                graph.prompt_len * act_tok,
+                act_tok,
+                graph.chunk_tokens,
+            )["total_ms"]
+
+        edge_ms = edge_exec * hw.rate_edge_ms_per_gb
+        cloud_ms = hw.cloud_time_ms(cloud_exec) if f_eff > 0.0 else 0.0
+        total = edge_ms + f_eff * (net + cloud_ms)
+        feasible = edge_gb <= edge_mem_gb + 1e-9 and cloud_gb <= cloud_mem_gb + 1e-9
+        evals.append(
+            CutEval(
+                cut=cut,
+                feasible=feasible,
+                edge_gb=edge_gb,
+                cloud_gb=cloud_gb,
+                edge_exec_gb=edge_exec,
+                cloud_exec_gb=cloud_exec,
+                offload_fraction=f_eff,
+                edge_ms=edge_ms,
+                cloud_ms=cloud_ms,
+                net_ms=net,
+                total_ms=total,
+            )
+        )
+    return evals
+
+
+def plan_partition(
+    cfg: ModelConfig,
+    hw: Optional[HardwareModel] = None,
+    channel: Optional[ChannelConfig] = None,
+    *,
+    offload_fraction: float = DEFAULT_OFFLOAD_FRACTION,
+    edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
+    cloud_mem_gb: float = float("inf"),
+    prompt_len: Optional[int] = None,
+    chunk_tokens: Optional[int] = None,
+    graph: Optional[InferenceGraph] = None,
+) -> PartitionPlan:
+    """Choose the compatibility-optimal cut for ``cfg``.
+
+    ``hw`` defaults to the calibrated anchor rates scaled to this
+    architecture's parameter bytes (``arch_hardware_model``).
+    """
+
+    if graph is None:
+        kw = {}
+        if chunk_tokens is not None:
+            kw["chunk_tokens"] = chunk_tokens
+        graph = build_graph(cfg, prompt_len=prompt_len, **kw)
+    if hw is None:
+        hw = arch_hardware_model(int(graph.total_param_bytes))
+    channel = channel or hw.channel
+
+    evals = enumerate_cuts(
+        graph, hw, channel,
+        offload_fraction=offload_fraction,
+        edge_mem_gb=edge_mem_gb,
+        cloud_mem_gb=cloud_mem_gb,
+    )
+    feasible = [e for e in evals if e.feasible]
+    if not feasible:
+        raise ValueError(
+            f"no feasible cut for {cfg.name}: smallest suffix exceeds the "
+            f"cloud budget ({cloud_mem_gb} GB)"
+        )
+    best = min(feasible, key=lambda e: e.total_ms)
+    n = len(graph.nodes)
+    edge_only = evals[n]
+    cloud_only = evals[0]
+    mode = "cloud_only" if best.cut == 0 else (
+        "edge_only" if best.cut == n else "split"
+    )
+    return PartitionPlan(
+        arch=cfg.name,
+        cut=best.cut,
+        cut_layer=graph.cut_layers(best.cut),
+        n_nodes=n,
+        mode=mode,
+        edge_gb=best.edge_gb,
+        cloud_gb=best.cloud_gb,
+        edge_exec_gb=best.edge_exec_gb,
+        cloud_exec_gb=best.cloud_exec_gb,
+        offload_fraction=best.offload_fraction,
+        edge_ms=best.edge_ms,
+        cloud_ms=best.cloud_ms,
+        net_ms=best.net_ms,
+        total_ms=best.total_ms,
+        edge_only_ms=edge_only.total_ms if edge_only.feasible else None,
+        cloud_only_ms=cloud_only.total_ms if cloud_only.feasible else None,
+        prompt_len=graph.prompt_len,
+        chunk_tokens=graph.chunk_tokens,
+        edge_mem_gb=edge_mem_gb,
+        channel=dataclasses.asdict(channel),
+    )

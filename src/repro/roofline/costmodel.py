@@ -117,6 +117,82 @@ def _vpad(cfg: ModelConfig) -> int:
     return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
 
 
+def block_flops(cfg: ModelConfig, spec, batch: int, s: int, *, decode: bool = False,
+                kv_len: int = 0, sparse_attn: bool = False,
+                dense_dispatch: bool = True, cached_cross_kv: bool = False) -> float:
+    """Executed FLOPs of ONE layer (block + its MLP/MoE + enc-dec cross-attn).
+
+    ``spec`` is a ``layer_specs`` entry ``(block_type, is_moe, is_local)``.
+    This is the per-block term the partition graph prices; ``forward_flops``
+    sums it over the stack.
+    """
+
+    blk, is_moe, local = spec
+    total = 0.0
+    window = 0
+    if local and cfg.sliding_window:
+        window = cfg.sliding_window
+    elif (kv_len or s) > cfg.long_context_window and cfg.subquadratic_decode:
+        window = cfg.long_context_window
+    if blk == "attn":
+        if decode:
+            hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+            d = cfg.d_model
+            eff = (min(kv_len, window) if window else kv_len) if sparse_attn else kv_len
+            total += batch * (
+                2.0 * d * (nh * hd) * 2 + 2.0 * d * (nkv * hd) * 2
+                + 2.0 * 2.0 * nh * hd * eff
+            )
+        else:
+            total += batch * _attn_flops_per_seq(cfg, s, window, sparse=sparse_attn)
+    elif blk == "mamba":
+        total += batch * _mamba_flops_per_seq(cfg, 1 if decode else s)
+    elif blk == "mlstm":
+        total += batch * _mlstm_flops_per_seq(cfg, 1 if decode else s)
+    elif blk == "slstm":
+        total += batch * _slstm_flops_per_seq(cfg, 1 if decode else s)
+    toks = batch * (1 if decode else s)
+    if cfg.d_ff > 0:
+        total += toks * (
+            _moe_flops_per_tok(cfg, dense_dispatch=dense_dispatch)
+            if is_moe
+            else _mlp_flops_per_tok(cfg)
+        )
+    if blk == "attn" and cfg.encoder_decoder:
+        # cross attention: q/o proj per dec token + scores over enc len
+        hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+        d = cfg.d_model
+        enc_len = kv_len if decode else s
+        total += toks * (2.0 * d * (nh * hd) * 2 + 2.0 * 2.0 * nh * hd * enc_len)
+        # k/v proj over encoder states: recomputed per call (baseline)
+        # or cached at prefill (§Perf cached_cross_kv — decode skips it)
+        if not (decode and cached_cross_kv):
+            total += batch * 2.0 * enc_len * d * (nkv * hd) * 2
+    return total
+
+
+def head_flops(cfg: ModelConfig, batch: int, s: int, *, decode: bool = False) -> float:
+    """LM-head logits matmul FLOPs (padded vocab)."""
+
+    toks = batch * (1 if decode else s)
+    return toks * 2.0 * cfg.d_model * _vpad(cfg)
+
+
+def encoder_flops(cfg: ModelConfig, batch: int, s: int) -> float:
+    """Encoder-stack FLOPs (enc-dec only; 0 otherwise)."""
+
+    if not cfg.encoder_decoder:
+        return 0.0
+    # encoder: self-attn (non-causal: full S per query) + mlp, per layer
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    d = cfg.d_model
+    enc_attn = (
+        2.0 * s * d * (nh * hd) * 2 + 2.0 * s * d * (nkv * hd) * 2
+        + 2.0 * 2.0 * nh * hd * s * s
+    )
+    return cfg.num_encoder_layers * batch * (enc_attn + s * _mlp_flops_per_tok(cfg))
+
+
 def forward_flops(cfg: ModelConfig, batch: int, s: int, *, decode: bool = False,
                   kv_len: int = 0, optimized: bool = False,
                   sparse_attn: Optional[bool] = None,
@@ -136,60 +212,17 @@ def forward_flops(cfg: ModelConfig, batch: int, s: int, *, decode: bool = False,
     total = 0.0
     from repro.models.model import layer_specs
 
-    for (blk, is_moe, local) in layer_specs(cfg):
-        window = 0
-        if local and cfg.sliding_window:
-            window = cfg.sliding_window
-        elif (kv_len or s) > cfg.long_context_window and cfg.subquadratic_decode:
-            window = cfg.long_context_window
-        if blk == "attn":
-            if decode:
-                hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
-                d = cfg.d_model
-                eff = (min(kv_len, window) if window else kv_len) if sparse_attn else kv_len
-                total += batch * (
-                    2.0 * d * (nh * hd) * 2 + 2.0 * d * (nkv * hd) * 2
-                    + 2.0 * 2.0 * nh * hd * eff
-                )
-            else:
-                total += batch * _attn_flops_per_seq(cfg, s, window, sparse=sparse_attn)
-        elif blk == "mamba":
-            total += batch * _mamba_flops_per_seq(cfg, 1 if decode else s)
-        elif blk == "mlstm":
-            total += batch * _mlstm_flops_per_seq(cfg, 1 if decode else s)
-        elif blk == "slstm":
-            total += batch * _slstm_flops_per_seq(cfg, 1 if decode else s)
-        toks = batch * (1 if decode else s)
-        if cfg.d_ff > 0:
-            total += toks * (
-                _moe_flops_per_tok(cfg, dense_dispatch=not optimized)
-                if is_moe
-                else _mlp_flops_per_tok(cfg)
-            )
-        if blk == "attn" and cfg.encoder_decoder:
-            # cross attention: q/o proj per dec token + scores over enc len
-            hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
-            d = cfg.d_model
-            enc_len = kv_len if decode else s
-            total += toks * (2.0 * d * (nh * hd) * 2 + 2.0 * 2.0 * nh * hd * enc_len)
-            # k/v proj over encoder states: recomputed per call (baseline)
-            # or cached at prefill (§Perf cached_cross_kv — decode skips it)
-            if not (decode and cached_cross_kv):
-                total += batch * 2.0 * enc_len * d * (nkv * hd) * 2
-
-    # logits
-    toks = batch * (1 if decode else s)
-    total += toks * 2.0 * cfg.d_model * _vpad(cfg)
-
-    if cfg.encoder_decoder and not decode:
-        # encoder: self-attn (non-causal: full S per query) + mlp, per layer
-        hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
-        d = cfg.d_model
-        enc_attn = (
-            2.0 * s * d * (nh * hd) * 2 + 2.0 * s * d * (nkv * hd) * 2
-            + 2.0 * 2.0 * nh * hd * s * s
+    for spec in layer_specs(cfg):
+        total += block_flops(
+            cfg, spec, batch, s, decode=decode, kv_len=kv_len,
+            sparse_attn=sparse_attn, dense_dispatch=not optimized,
+            cached_cross_kv=cached_cross_kv,
         )
-        total += cfg.num_encoder_layers * batch * (enc_attn + s * _mlp_flops_per_tok(cfg))
+
+    total += head_flops(cfg, batch, s, decode=decode)
+
+    if not decode:
+        total += encoder_flops(cfg, batch, s)
     return total
 
 
@@ -226,6 +259,39 @@ def estimate(
     return CostEstimate(flops=flops, hbm_bytes=hbm, flops_model=model_flops)
 
 
+def block_decode_bytes(cfg: ModelConfig, spec, b: int, s: int,
+                       windowed: bool = False) -> float:
+    """KV-cache / recurrent-state bytes ONE layer reads+writes per decode
+    step — the per-block memory-wall term the partition graph prices."""
+
+    from repro.models.ssm import HEAD_P, ssm_dims
+
+    blk, _, local = spec
+    total = 0.0
+    if blk == "attn":
+        window = cfg.sliding_window if (local and cfg.sliding_window) else (
+            cfg.long_context_window
+            if s > cfg.long_context_window and cfg.subquadratic_decode
+            else 0
+        )
+        eff = (min(s, window) if window else s) if windowed else s
+        total += 2.0 * b * eff * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+        if cfg.encoder_decoder:
+            total += 2.0 * b * s * cfg.d_model  # enc_out read (baseline recompute)
+    elif blk == "mamba":
+        d_in, nh, n = ssm_dims(cfg)
+        p = HEAD_P if d_in >= HEAD_P else d_in
+        total += 4.0 * b * nh * p * n * 2  # read+write h
+    elif blk == "mlstm":
+        x = cfg.xlstm or XLSTMConfig()
+        d_in = int(x.proj_factor_mlstm * cfg.d_model)
+        dh = d_in // cfg.num_heads
+        total += 4.0 * b * cfg.num_heads * dh * dh * 2
+    elif blk == "slstm":
+        total += 8.0 * b * cfg.d_model * 4
+    return total
+
+
 def _decode_cache_bytes(cfg: ModelConfig, b: int, s: int, windowed: bool = False) -> float:
     """KV cache / state bytes READ for one decode step (the memory wall).
 
@@ -234,29 +300,8 @@ def _decode_cache_bytes(cfg: ModelConfig, b: int, s: int, windowed: bool = False
     """
 
     from repro.models.model import layer_specs
-    from repro.models.ssm import HEAD_P, ssm_dims
 
-    total = 0.0
-    for (blk, _, local) in layer_specs(cfg):
-        if blk == "attn":
-            window = cfg.sliding_window if (local and cfg.sliding_window) else (
-                cfg.long_context_window
-                if s > cfg.long_context_window and cfg.subquadratic_decode
-                else 0
-            )
-            eff = (min(s, window) if window else s) if windowed else s
-            total += 2.0 * b * eff * cfg.num_kv_heads * cfg.resolved_head_dim * 2
-            if cfg.encoder_decoder:
-                total += 2.0 * b * s * cfg.d_model  # enc_out read (baseline recompute)
-        elif blk == "mamba":
-            d_in, nh, n = ssm_dims(cfg)
-            p = HEAD_P if d_in >= HEAD_P else d_in
-            total += 4.0 * b * nh * p * n * 2  # read+write h
-        elif blk == "mlstm":
-            x = cfg.xlstm or XLSTMConfig()
-            d_in = int(x.proj_factor_mlstm * cfg.d_model)
-            dh = d_in // cfg.num_heads
-            total += 4.0 * b * cfg.num_heads * dh * dh * 2
-        elif blk == "slstm":
-            total += 8.0 * b * cfg.d_model * 4
-    return total
+    return sum(
+        block_decode_bytes(cfg, spec, b, s, windowed=windowed)
+        for spec in layer_specs(cfg)
+    )

@@ -21,12 +21,33 @@ class ChannelConfig:
     jitter_ms: float = 1.5
 
 
+def ship_ms(nbytes: float, mbps: float) -> float:
+    """Serialization time of ``nbytes`` over an ``mbps`` link."""
+
+    return nbytes * 8.0 / (mbps * 1e6) * 1e3
+
+
 def query_latency_ms(cfg: ChannelConfig, chunk_len: int) -> float:
     """Deterministic mean latency of one offload round-trip."""
 
-    up = cfg.obs_bytes * 8.0 / (cfg.uplink_mbps * 1e6) * 1e3
-    down = chunk_len * cfg.per_action_bytes * 8.0 / (cfg.downlink_mbps * 1e6) * 1e3
+    up = ship_ms(cfg.obs_bytes, cfg.uplink_mbps)
+    down = ship_ms(chunk_len * cfg.per_action_bytes, cfg.downlink_mbps)
     return cfg.rtt_ms + up + down
+
+
+def sample_latency_ms(cfg: ChannelConfig, chunk_len: int, key) -> float:
+    """One stochastic offload round-trip: mean plus exponential jitter.
+
+    ``jitter_ms`` is the MEAN of a one-sided exponential excess (queueing
+    delay is non-negative and heavy-tailed), so repeated samples average to
+    ``query_latency_ms + jitter_ms``.  ``key`` is a jax PRNG key; fold in a
+    counter per offload for independent draws.
+    """
+
+    import jax  # deferred: keep the channel model importable without jax
+
+    base = query_latency_ms(cfg, chunk_len)
+    return base + float(jax.random.exponential(key)) * cfg.jitter_ms
 
 
 def bandwidth_bytes_per_episode(cfg: ChannelConfig, n_offloads: int, chunk_len: int) -> int:

@@ -84,6 +84,8 @@ class ContinuousBatchingScheduler:
         chunk_len: int = 8,
         n_joints: int = 7,
         decode_block: Optional[int] = None,
+        adaptive_block: bool = False,
+        max_block: Optional[int] = None,
         page_size: int = DEFAULT_PAGE_SIZE,
         num_pages: Optional[int] = None,
     ):
@@ -97,6 +99,12 @@ class ContinuousBatchingScheduler:
         self.n_joints = n_joints
         self.total_tokens = chunk_len * n_joints
         self.decode_block = decode_block or n_joints
+        # adaptive decode blocks: scale the per-round block with queue depth
+        # (deeper backlog -> larger blocks -> fewer host syncs / better
+        # throughput, at bounded added per-chunk latency).  Power-of-two
+        # doublings only, so at most log2(max/base) jitted round variants.
+        self.adaptive_block = adaptive_block
+        self.max_block = min(max_block or 4 * self.decode_block, self.total_tokens)
         self.prompt_len = 2 * n_joints
         self.round = 0
         self.peak_active = 0
@@ -139,17 +147,8 @@ class ContinuousBatchingScheduler:
 
         self._admit = jax.jit(admit)
 
-        def decode_rounds(params, logits_rows, cache, active_mask):
-            toks, logits, cache = model.decode_chunk(
-                params, logits_rows[:, None], cache, self.decode_block, base
-            )
-            # idle slots produced garbage writes at their own rows; pin their
-            # lengths back to zero so idle caches never grow across rounds
-            cache = dict(cache)
-            cache["len"] = jnp.where(active_mask, cache["len"], 0)
-            return toks, logits[:, -1], cache
-
-        self._decode = jax.jit(decode_rounds)
+        self._token_floor = base
+        self._decode_fns = {}
 
         # live batch state: one dummy batched prefill fixes every pytree
         # shape (and warms the compile); lengths start at zero
@@ -196,6 +195,41 @@ class ContinuousBatchingScheduler:
     # scheduling
     # ------------------------------------------------------------------
 
+    def _block_for_depth(self, depth: int) -> int:
+        """Per-round decode block, monotone non-decreasing in queue depth.
+
+        Fixed-block mode (the default) always returns ``decode_block``.
+        Adaptive mode doubles the block each time the pending backlog could
+        refill the whole slot pool, capped at ``max_block``.
+        """
+
+        blk = self.decode_block
+        if not self.adaptive_block:
+            return blk
+        while depth >= self.max_slots and blk * 2 <= self.max_block:
+            blk *= 2
+            depth -= self.max_slots
+        return blk
+
+    def _decode_for(self, n_steps: int):
+        """Jitted decode round for one block size (cached per size)."""
+
+        fn = self._decode_fns.get(n_steps)
+        if fn is None:
+            def decode_rounds(params, logits_rows, cache, active_mask):
+                toks, logits, cache = self.model.decode_chunk(
+                    params, logits_rows[:, None], cache, n_steps, self._token_floor
+                )
+                # idle slots produced garbage writes at their own rows; pin
+                # their lengths back to zero so idle caches never grow
+                cache = dict(cache)
+                cache["len"] = jnp.where(active_mask, cache["len"], 0)
+                return toks, logits[:, -1], cache
+
+            fn = jax.jit(decode_rounds)
+            self._decode_fns[n_steps] = fn
+        return fn
+
     def _try_admit(self) -> None:
         admit_mask = np.zeros(self.max_slots, bool)
         obs_batch = np.zeros((self.max_slots, self.prompt_len), np.int64)
@@ -236,15 +270,16 @@ class ContinuousBatchingScheduler:
         self.peak_active = max(self.peak_active, int(active.sum()))
         if not active.any():
             return []
-        toks, self._logits, self._cache = self._decode(
+        block = self._block_for_depth(self.n_pending)
+        toks, self._logits, self._cache = self._decode_for(block)(
             self.params, self._logits, self._cache, jnp.asarray(active)
         )
-        toks = np.asarray(toks)  # [B, decode_block] — one sync per round
+        toks = np.asarray(toks)  # [B, block] — one sync per round
         done: List[ChunkResult] = []
         for i, slot in enumerate(self._slots):
             if not slot.active:
                 continue
-            take = min(slot.remaining, self.decode_block)
+            take = min(slot.remaining, block)
             slot.tokens.extend(int(t) for t in toks[i, :take])
             slot.remaining -= take
             if slot.remaining == 0:

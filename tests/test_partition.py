@@ -1,0 +1,236 @@
+"""Partition subsystem tests: graph accounting, planner optimality, and
+split-execution parity with the unpartitioned model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import Model
+from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+from repro.partition.graph import build_graph
+from repro.partition.planner import (
+    NETWORK_PROFILES,
+    enumerate_cuts,
+    plan_partition,
+)
+from repro.runtime.latency import arch_hardware_model
+
+# one representative per block family: attention+vision stem, MoE,
+# SSM-hybrid (mamba+attn+MoE), xLSTM (mlstm+slstm)
+FAMILY_ARCHS = (
+    "openvla-7b",
+    "phi3.5-moe-42b-a6.6b",
+    "jamba-1.5-large-398b",
+    "xlstm-125m",
+)
+
+
+def _f32_stack(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32", param_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batch_for(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.modality != "text" and not cfg.encoder_decoder:
+        batch["frontend"] = (
+            jax.random.normal(key, (b, cfg.num_modality_tokens, cfg.d_model)) * 0.02
+        )
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# graph lowering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_graph_totals_match_param_counts(arch):
+    """Node resident bytes must sum to the config's param bytes (±2% for
+    the modality-projector stub param_counts doesn't track)."""
+
+    cfg = get_config(arch)
+    g = build_graph(cfg)
+    want = cfg.param_counts()["total"] * 2.0
+    assert abs(g.total_param_bytes - want) / want < 0.02
+    assert len(g.nodes) == cfg.num_layers + 2
+    assert g.nodes[0].kind == "stem" and g.nodes[-1].kind == "head"
+    kinds = {n.kind for n in g.nodes if n.layer is not None}
+    assert kinds == set(cfg.blocks)
+
+
+def test_graph_moe_exec_smaller_than_resident():
+    """MoE blocks execute top-k experts but keep all resident — the
+    asymmetry that makes partitioning compatibility-aware."""
+
+    g = build_graph(get_config("qwen3-moe-235b-a22b"))
+    moe = [n for n in g.nodes if n.is_moe]
+    assert moe and all(n.exec_bytes < 0.2 * n.param_bytes for n in moe)
+    assert g.total_exec_bytes < 0.2 * g.total_param_bytes
+
+
+def test_graph_per_block_costs_positive():
+    g = build_graph(get_config("jamba-1.5-large-398b"))
+    for n in g.nodes:
+        if n.layer is not None:
+            assert n.flops_prefill > 0 and n.flops_decode > 0
+            assert n.hbm_bytes_decode > 0 and n.cut_act_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+def test_planner_never_worse_than_single_device():
+    """Acceptance: the chosen cut beats (or ties) every feasible
+    single-device deployment, for every architecture x network profile —
+    the exact sweep written to BENCH_partition.json."""
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        graph = build_graph(cfg)
+        for profile, channel in NETWORK_PROFILES.items():
+            plan = plan_partition(cfg, channel=channel, graph=graph)
+            anchors = [
+                m for m in (plan.edge_only_ms, plan.cloud_only_ms) if m is not None
+            ]
+            assert anchors, (arch, profile)
+            assert plan.total_ms <= min(anchors) + 1e-9, (arch, profile)
+
+
+def test_planner_extremes_match_modes():
+    cfg = get_config("openvla-7b")
+    graph = build_graph(cfg)
+    hw = arch_hardware_model(int(graph.total_param_bytes))
+    evals = enumerate_cuts(graph, hw)
+    assert evals[0].offload_fraction == 1.0      # no edge model -> must fetch
+    assert evals[-1].offload_fraction == 0.0     # nothing to offload
+    assert evals[-1].net_ms == 0.0 and evals[-1].cloud_ms == 0.0
+    assert evals[0].edge_gb == 0.0 and evals[0].edge_ms == 0.0
+
+
+def test_planner_respects_edge_memory_budget():
+    cfg = get_config("qwen3-moe-235b-a22b")  # 470 GB resident
+    plan = plan_partition(cfg, edge_mem_gb=8.0)
+    assert plan.edge_gb <= 8.0
+    assert plan.edge_only_ms is None  # can't hold 470 GB on a Jetson
+    # a generous budget makes edge-only feasible again
+    plan_big = plan_partition(cfg, edge_mem_gb=1e6)
+    assert plan_big.edge_only_ms is not None
+
+
+def test_planner_tied_embeddings_duplicate_table():
+    cfg = get_config("gemma2-9b")
+    assert cfg.tie_embeddings
+    graph = build_graph(cfg)
+    hw = arch_hardware_model(int(graph.total_param_bytes))
+    evals = enumerate_cuts(graph, hw)
+    n = len(graph.nodes)
+    interior = evals[n // 2]
+    # cloud resident exceeds the plain suffix sum by the embedding table
+    scale = hw.full_model_gb / (graph.total_param_bytes / 1e9)
+    plain = sum(nd.param_bytes for nd in graph.nodes[n // 2:]) * scale / 1e9
+    want_extra = graph.embed_bytes * scale / 1e9
+    assert interior.cloud_gb == pytest.approx(plain + want_extra)
+
+
+def test_plan_json_roundtrip():
+    from repro.partition.planner import PartitionPlan
+
+    plan = plan_partition(get_config("openvla-7b"))
+    assert PartitionPlan.from_json(plan.to_json()) == plan
+
+
+def test_bench_partition_rows(tmp_path):
+    """The bench sweep itself upholds the acceptance bound cell by cell.
+
+    Writes to a tmp file so test runs never clobber the committed
+    ``BENCH_partition.json`` (which ``benchmarks/run.py`` regenerates with
+    the live trigger-sim offload fraction)."""
+
+    from benchmarks.partition_bench import bench_rows
+
+    path = tmp_path / "BENCH_partition.json"
+    rows, n_split = bench_rows(offload_fraction=0.31, out_path=str(path))
+    assert len(rows) == len(ARCH_IDS)
+    assert n_split > 0, "no architecture/profile ever benefits from a split"
+    import json
+
+    data = json.load(open(path))
+    cells = {k: v for k, v in data.items() if isinstance(v, dict)}
+    assert len(cells) == len(ARCH_IDS) * len(NETWORK_PROFILES)
+    for key, cell in cells.items():
+        anchors = [
+            cell[k] for k in ("edge_only_ms", "cloud_only_ms") if cell[k] is not None
+        ]
+        assert cell["total_ms"] <= min(anchors) + 1e-6, key
+
+
+# ---------------------------------------------------------------------------
+# split execution parity (acceptance: <= 1e-5 on >= 3 block families)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_split_forward_matches_unpartitioned(arch):
+    cfg, model, params = _f32_stack(arch)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    want, _, _ = model.forward(params, batch)
+    for cut in sorted({0, 1, cfg.num_layers // 2, cfg.num_layers}):
+        ex = PartitionExecutor(model, params, cut)
+        got = ex.forward(batch)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err <= 1e-5, (arch, cut, err)
+        # logits through the split head must match the model's too
+        np.testing.assert_allclose(
+            np.asarray(ex.logits(got[:, -1:])),
+            np.asarray(model._logits(params, want[:, -1:])),
+            atol=1e-5,
+        )
+
+
+def test_split_executor_ships_cut_activations():
+    cfg, model, params = _f32_stack("openvla-7b")
+    batch = _batch_for(cfg, jax.random.PRNGKey(2))
+    ex = PartitionExecutor(model, params, 1)
+    x, positions = ex.edge_forward(batch)
+    s = batch["tokens"].shape[1] + cfg.num_modality_tokens
+    assert x.shape == (2, s, cfg.d_model)
+    ex.forward(batch)
+    assert ex.shipped_bytes == np.prod(x.shape) * x.dtype.itemsize
+
+
+@pytest.mark.parametrize("arch", ("openvla-7b", "jamba-1.5-large-398b"))
+def test_split_decode_matches_unpartitioned_policy(arch):
+    """Split serving (edge prefix -> ping-pong decode) must produce the
+    exact greedy action chunk of the single-device fused policy."""
+
+    from repro.data.pipeline import EpisodeTokenizer
+    from repro.launch.serve import CloudPolicy
+
+    cfg, model, params = _f32_stack(arch)
+    tok = EpisodeTokenizer(cfg.vocab_size)
+    ref = CloudPolicy(model, params, tok)
+    rng = np.random.default_rng(7)
+    qd = rng.normal(0, 0.5, (1, 7)).astype(np.float32)
+    tau = rng.normal(0, 0.5, (1, 7)).astype(np.float32)
+    want = ref(qd, tau)
+    for cut in (1, cfg.num_layers - 1):
+        ex = PartitionExecutor(model, params, cut)
+        policy = PartitionedPolicy(ex, tok)
+        np.testing.assert_array_equal(want, policy(qd, tau))
+        assert policy.net_ms_log and policy.net_ms_log[0] > 0
+
+
+def test_executor_rejects_bad_cuts():
+    cfg, model, params = _f32_stack("xlstm-125m")
+    with pytest.raises(ValueError):
+        PartitionExecutor(model, params, cfg.num_layers + 1)
+    with pytest.raises(NotImplementedError):
+        cfg2, model2, params2 = _f32_stack("seamless-m4t-medium")
+        PartitionExecutor(model2, params2, 1)

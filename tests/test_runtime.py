@@ -6,10 +6,11 @@ import pytest
 from repro.robotics.dynamics import ArmModel, inverse_dynamics, trapezoid_segment
 from repro.robotics.episodes import generate_episode, reference_chunks
 from repro.robotics.noise import entropy_stream
-from repro.runtime.channel import ChannelConfig, query_latency_ms
+from repro.runtime.channel import ChannelConfig, query_latency_ms, sample_latency_ms
 from repro.runtime.engine import EngineConfig, evaluate_strategy, run_strategy
 from repro.runtime.latency import HardwareModel
 
+import jax
 import jax.numpy as jnp
 
 
@@ -68,6 +69,48 @@ def test_channel_latency():
     cfg = ChannelConfig()
     lat = query_latency_ms(cfg, 8)
     assert cfg.rtt_ms < lat < cfg.rtt_ms + 10
+
+
+def test_channel_jitter_sampling():
+    """Stochastic offloads: nonnegative jitter, correct long-run mean."""
+
+    cfg = ChannelConfig()
+    base = query_latency_ms(cfg, 8)
+    keys = jax.random.split(jax.random.PRNGKey(0), 400)
+    lats = np.asarray([sample_latency_ms(cfg, 8, k) for k in keys])
+    assert (lats >= base).all()
+    assert lats.std() > 0.0, "jitter_ms must make offload latency stochastic"
+    # exponential excess with mean jitter_ms
+    assert abs(lats.mean() - (base + cfg.jitter_ms)) < 0.35 * cfg.jitter_ms
+
+
+def test_hardware_model_calibration_anchors():
+    """calibrated() must reproduce the Table III anchor rows exactly."""
+
+    hw = HardwareModel.calibrated()
+    assert hw.full_model_gb * hw.rate_edge_ms_per_gb == pytest.approx(782.5)
+    net = query_latency_ms(hw.channel, hw.chunk_len)
+    assert net + hw.cloud_time_ms(hw.full_model_gb) == pytest.approx(113.8)
+
+
+def test_strategy_latency_monotone_in_resident_gb():
+    """More edge-resident GB -> more edge time, less cloud time."""
+
+    from repro.runtime.latency import SimCounters, StrategyProfile, evaluate
+
+    hw = HardwareModel.calibrated()
+    counters = SimCounters(
+        n_steps=800, n_chunks=100, n_offloads=30, n_edge_infer=70,
+        n_interruptions=5,
+    )
+    reports = [
+        evaluate(hw, StrategyProfile(f"gb{g}", edge_gb=float(g)), counters)
+        for g in range(1, 13)
+    ]
+    edge = [r.edge_ms for r in reports]
+    cloud = [r.cloud_ms for r in reports]
+    assert all(a < b for a, b in zip(edge, edge[1:]))
+    assert all(a > b for a, b in zip(cloud, cloud[1:]))
 
 
 def test_anchor_rows_reproduced():

@@ -193,6 +193,57 @@ def test_serve_fleet_end_to_end(stack):
     assert out["actions"].shape == (60, 2, 7)
     assert out["offloads"].sum() > 0
     assert len(out["service_rounds"]) > 0
+    # satellite: offload latency is sampled per chunk, not deterministic
+    assert len(out["offload_ms"]) == len(out["service_rounds"])
+    if len(out["offload_ms"]) > 1:
+        assert np.std(out["offload_ms"]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# adaptive decode blocks
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_block_monotone_in_queue_depth(stack):
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=4, adaptive_block=True
+    )
+    blocks = [sched._block_for_depth(d) for d in range(0, 64)]
+    assert blocks[0] == sched.decode_block
+    assert all(a <= b for a, b in zip(blocks, blocks[1:])), "must be monotone"
+    assert max(blocks) > sched.decode_block, "deep queues must grow the block"
+    assert max(blocks) <= sched.max_block
+
+
+def test_fixed_block_default_unchanged(stack):
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=4)
+    assert not sched.adaptive_block
+    assert all(
+        sched._block_for_depth(d) == sched.decode_block for d in range(0, 64)
+    )
+
+
+def test_adaptive_scheduler_matches_fixed_tokens(stack):
+    """Bigger decode blocks change round pacing, never the greedy chunks."""
+
+    _, model, params, tok = stack
+    rng = np.random.default_rng(4)
+    reqs = [(r, *_obs(rng)) for r in range(3)]
+
+    def run(adaptive):
+        sched = ContinuousBatchingScheduler(
+            model, params, tok, max_slots=4, adaptive_block=adaptive
+        )
+        for r, qd, tau in reqs:
+            sched.submit(r, qd, tau)
+        return {res.robot_id: res.tokens for res in sched.drain()}
+
+    fixed, adaptive = run(False), run(True)
+    assert fixed.keys() == adaptive.keys()
+    for r in fixed:
+        np.testing.assert_array_equal(fixed[r], adaptive[r])
 
 
 # ---------------------------------------------------------------------------
