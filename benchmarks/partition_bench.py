@@ -54,9 +54,15 @@ def bench_rows(offload_fraction=None, out_path=None):
                 cfg, channel=channel,
                 offload_fraction=offload_fraction, graph=graph,
             )
+            pipe = plan_partition(
+                cfg, channel=channel,
+                offload_fraction=offload_fraction, graph=graph, pipelined=True,
+            )
             n_split += plan.mode == "split"
             out[f"{arch}|{profile}"] = {
                 "mode": plan.mode,
+                "pipelined_mode": pipe.mode,
+                "pipelined_total_ms": round(pipe.total_ms, 2),
                 "cut": plan.cut,
                 "cut_layer": plan.cut_layer,
                 "edge_gb": round(plan.edge_gb, 3),

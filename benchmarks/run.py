@@ -38,6 +38,8 @@ def main(argv=None) -> None:
     from benchmarks import serving_bench
 
     _timed("serving_engine_speedup_8req", serving_bench.bench_rows, detail)
+    # paged engine: slot-bounded vs page-bounded admission concurrency
+    _timed("paged_engine_concurrency", serving_bench.bench_paged_rows, detail)
 
     # partition planner: all architectures x network profiles (analytic)
     from benchmarks import partition_bench

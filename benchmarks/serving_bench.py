@@ -11,7 +11,11 @@ config (CPU container; the same harness runs compiled on TPU):
     the way the seed repo serves them (sequential batch-1 per-token loops,
     as ``serve_episode`` does) vs one continuous-batching engine round-trip;
   * ``ragged`` vs ``gang`` — staggered arrivals admitted into in-flight
-    decode batches vs gang-scheduling that drains the current batch first.
+    decode batches vs gang-scheduling that drains the current batch first;
+  * ``slotpool`` vs ``pagepool`` — the paged engine under a 16-request
+    burst with the pool sized to the legacy 8-slot capacity vs sized for
+    the burst: admission is page-bounded, so the bigger pool lifts peak
+    concurrency (and tokens/s) without any slot-count change.
 
 Emits the ``name,us_per_call,derived`` CSV contract and writes the raw
 numbers to ``BENCH_serving.json`` so the perf trajectory is tracked.
@@ -139,8 +143,72 @@ def bench_rows():
     )
 
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-    with open(os.path.abspath(path), "w") as f:
-        json.dump({k: round(v, 3) for k, v in out.items()}, f, indent=2)
+    _update_json(path, out)
+    return rows, round(speedup, 2)
+
+
+def _update_json(path, out):
+    path = os.path.abspath(path)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update({k: round(v, 3) for k, v in out.items()})
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+
+
+def bench_paged_rows():
+    """Slot-bounded vs page-bounded admission on the paged engine.
+
+    The old engine pinned residency to a fixed slot count; the paged
+    scheduler admits as long as KV pages are free (rows double on demand).
+    Same 16-request burst, two pool sizes: one sized to the old 8-slot
+    capacity (admission caps at 8 concurrent) and one sized for 16.
+    """
+
+    from repro.runtime.scheduler import ContinuousBatchingScheduler
+
+    model, params, tok = _stack()
+    rng = np.random.default_rng(1)
+    n_burst = 16
+    burst = [_obs(rng, 1) for _ in range(n_burst)]
+
+    def run(sched):
+        sched.reset()
+        for i, (qd, tau) in enumerate(burst):
+            sched.submit(i, qd, tau)
+        t0 = time.time()
+        done = 0
+        while done < n_burst:
+            done += len(sched.step())
+        return time.time() - t0
+
+    out = {}
+    rows = []
+    # pool sized to the legacy 8-slot engine vs sized for the whole burst
+    slot_pool = ContinuousBatchingScheduler(model, params, tok, max_slots=8)
+    page_pool = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=8,
+        num_pages=slot_pool.pages_per_req * n_burst,
+    )
+    for name, sched in (("slotpool", slot_pool), ("pagepool", page_pool)):
+        run(sched)  # warm the jit caches (incl. row-growth variants)
+        dt = run(sched)
+        out[f"{name}_tok_s"] = n_burst * TOKENS_PER_CHUNK / dt
+        out[f"{name}_peak_concurrency"] = sched.peak_active
+        out[f"{name}_kv_pages"] = sched.allocator.num_pages
+    speedup = out["pagepool_tok_s"] / out["slotpool_tok_s"]
+    out["paged_concurrency_speedup"] = speedup
+    rows.append(
+        f"16-request burst: slot-sized pool "
+        f"(pages={out['slotpool_kv_pages']}) peak={out['slotpool_peak_concurrency']} "
+        f"{out['slotpool_tok_s']:.0f} tok/s | page-bounded "
+        f"(pages={out['pagepool_kv_pages']}) peak={out['pagepool_peak_concurrency']} "
+        f"{out['pagepool_tok_s']:.0f} tok/s ({speedup:.1f}x)"
+    )
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+    _update_json(path, out)
     return rows, round(speedup, 2)
 
 
@@ -149,6 +217,11 @@ def main():
     t0 = time.time()
     rows, derived = bench_rows()
     print(f"serving_engine_speedup_8req,{(time.time() - t0) * 1e6:.0f},{derived}")
+    for r in rows:
+        print("   ", r)
+    t0 = time.time()
+    rows, derived = bench_paged_rows()
+    print(f"paged_engine_concurrency,{(time.time() - t0) * 1e6:.0f},{derived}")
     for r in rows:
         print("   ", r)
 

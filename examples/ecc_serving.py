@@ -8,16 +8,23 @@ for production).  The chunk decode is a single fused on-device ``lax.scan``
 
 With ``--fleet N`` the same cloud engine serves N robots through the
 continuous-batching scheduler: dispatch triggers become requests that join
-in-flight decode batches, and chunks arrive back a few rounds later.
+in-flight decode batches, and chunks arrive back a few rounds later.  The
+engine runs on the paged KV substrate — admission is bounded by free KV
+pages, not a slot count (``--paged`` probes the same substrate for a single
+robot).
 
 With ``--partition auto`` the partition planner picks the
 compatibility-optimal edge-cloud cut for the full architecture and the
 episode is served through the split executor (edge prefix -> shipped cut
 activations -> cloud suffix) whenever the plan keeps layers on both sides.
+Combined with ``--fleet N`` it serves a MIXED fleet: every second robot goes
+through the split, and their cloud suffixes share decode rounds (and KV
+pages) with the cloud-only robots.
 
     PYTHONPATH=src python examples/ecc_serving.py --task drawer_open
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4
     PYTHONPATH=src python examples/ecc_serving.py --partition auto --network lan
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --partition auto --network lan
 """
 
 import argparse
@@ -43,6 +50,8 @@ def main(argv=None):
                    help="'none', 'auto' (partition planner), or edge layer count")
     p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
                    help="channel regime the partition planner prices")
+    p.add_argument("--paged", action="store_true",
+                   help="single-robot decode through the paged KV substrate")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -52,23 +61,38 @@ def main(argv=None):
     tok = EpisodeTokenizer(cfg.vocab_size)
 
     if args.fleet:
-        if args.partition != "none":
-            raise SystemExit("--partition serves single-robot episodes; drop --fleet")
+        from repro.launch.serve import plan_fleet_partition
         from repro.partition.planner import NETWORK_PROFILES
 
+        executor = None
+        split = []
+        if args.partition != "none":
+            executor, _ = plan_fleet_partition(
+                model, params, args.arch, args.network
+            )
+            if executor is not None:
+                split = list(range(1, args.fleet, 2))
+                print(f"mixed fleet: robots {split} serve through the split")
         out = serve_fleet(
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             channel=NETWORK_PROFILES[args.network],
+            partition_executor=executor, split_robots=split,
         )
         served = len(out["service_rounds"])
+        pool = out["pool"]
         print(f"chunks served: {served} (peak decode batch {out['peak_batch']})")
+        print(f"kv pages: high-water {pool.high_water}"
+              f"/{pool.pages_in_use + pool.pages_free}")
+        if split:
+            print(f"rounds with both kinds decoding: {out['mixed_rounds']}")
         print(f"mean offload net: {np.mean(out['offload_ms']):.1f} ms (jittered)"
               if out["offload_ms"] else "no offloads")
         print(f"actions executed: {out['actions'].shape}")
         return
 
     policy, _ = build_policy(
-        model, params, tok, args.arch, args.partition, args.network
+        model, params, tok, args.arch, args.partition, args.network,
+        paged=args.paged,
     )
     out = serve_episode(policy, task=args.task, max_steps=args.steps)
     frac = out["offloads"] / max(out["steps"] // 8, 1)

@@ -64,15 +64,22 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, cache_lens, *,
                            window=0, logit_cap=0.0):
     """Ragged-batch decode over the shared page pool (serving hot path).
 
-    Compiled on TPU; the CPU container runs the kernel in interpret mode,
-    which is exact but slow — the continuous-batching scheduler therefore
-    keeps its CPU smoke path on the jnp oracle via the model's decode step
-    and this op is exercised by the kernel test sweeps.
+    Compiled Pallas on TPU.  On CPU the kernel only runs in interpret mode
+    (kernel body executed in Python — far too slow for the decode hot loop),
+    so this op routes to the vectorized jnp gather-then-attend reference,
+    which mirrors the dense ``_sdpa`` math bit for bit; the Pallas kernel
+    itself stays covered by the interpret-mode parity sweeps in
+    ``tests/test_paged_attention.py``.
     """
 
+    if _interpret():
+        return _ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, page_table, cache_lens,
+            window=window, logit_cap=logit_cap,
+        )
     return _pa.paged_decode_attention(
         q, k_pages, v_pages, page_table, cache_lens,
-        window=window, logit_cap=logit_cap, interpret=_interpret(),
+        window=window, logit_cap=logit_cap, interpret=False,
     )
 
 

@@ -65,27 +65,34 @@ def paged_decode_attention_ref(
     q [B,H,D]; k/v pages [P, page, KV, D]; page_table [B, MAXP];
     cache_lens [B].  Gathers each sequence's pages into a dense
     [MAXP*page] cache and attends over the first ``cache_lens[b]`` slots.
+
+    The math mirrors ``models.attention._sdpa`` (grouped-query einsum, f32
+    scores, probabilities cast back to the value dtype) op for op, so the
+    model's paged decode path is bit-identical to its dense-slab path — the
+    parity ``tests/test_paged_model.py`` pins.  Gather-then-attend also
+    serves as the CPU fast path behind ``kernels.ops.paged_decode_attention``.
     """
 
     p_, page, kv, d = k_pages.shape
     b, h, _ = q.shape
     g = h // kv
     # [B, MAXP, page, KV, D] -> [B, S, KV, D] with S = MAXP*page
-    k = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, kv, d)
-    v = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, kv, d)
-    kr = jnp.repeat(k, g, axis=2).astype(jnp.float32)
-    vr = jnp.repeat(v, g, axis=2).astype(jnp.float32)
-    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kr) * d**-0.5
+    k = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, kv, d).astype(q.dtype)
+    v = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, kv, d).astype(q.dtype)
+    qg = q.reshape(b, 1, kv, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits * (d**-0.5)
     if logit_cap:
         logits = logit_cap * jnp.tanh(logits / logit_cap)
-    pos = jnp.arange(k.shape[1])[None, None, :]
-    lens = jnp.asarray(cache_lens)[:, None, None]
-    valid = pos < lens
+    pos = jnp.arange(k.shape[1])
+    lens = jnp.asarray(cache_lens)[:, None]
+    valid = pos[None, :] < lens                      # [B, S]
     if window:
-        valid &= pos >= lens - window
-    logits = jnp.where(valid, logits, NEG_INF)
-    p = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhk,bkhd->bhd", p, vr).astype(q.dtype)
+        valid &= pos[None, :] >= lens - window
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, 1, h, d)[:, 0].astype(q.dtype)
 
 
 def rolling_stats_ref(

@@ -9,15 +9,19 @@ the production-mesh sharded model.
 Two serving modes:
   * ``serve_episode`` — one robot, one ``CloudPolicy``; the action chunk is
     decoded by a single fused on-device ``lax.scan`` (no per-token host
-    syncs).
+    syncs).  ``--paged`` decodes through the paged KV substrate instead of
+    dense per-slot slabs (bit-identical greedy chunks).
   * ``serve_fleet`` — many robots sharing one cloud engine through the
     continuous-batching scheduler (``runtime/scheduler.py``): dispatch
-    triggers become requests that join in-flight decode batches, and chunks
-    arrive back asynchronously a few scheduler rounds later.
+    triggers become requests that join in-flight decode batches (admission
+    bounded by free KV pages), and chunks arrive back asynchronously a few
+    scheduler rounds later.
 
 ``--partition auto`` plans the compatibility-optimal edge-cloud cut for the
 full architecture (``repro.partition``) and serves the episode through the
-split executor when the plan keeps layers on both sides.
+split executor when the plan keeps layers on both sides.  Combined with
+``--fleet`` it serves a mixed fleet: partitioned robots' cloud suffixes
+share decode rounds and KV pages with the cloud-only robots.
 """
 
 from __future__ import annotations
@@ -47,17 +51,26 @@ class CloudPolicy:
     ``fused=False`` keeps the legacy per-token Python loop (one jitted call
     and an ``np.asarray`` sync per token) — the baseline the serving bench
     measures against; both produce bit-identical greedy chunks.
+
+    ``paged=True`` decodes through the model's paged KV mode — prompt KV is
+    scattered into a page pool after prefill and attention reads go through
+    ``ops.paged_decode_attention`` — the single-request probe of the serving
+    engine's KV substrate, bit-identical to the dense path.
     """
 
     def __init__(self, model: Model, params, tokenizer: EpisodeTokenizer,
-                 chunk_len: int = 8, n_joints: int = 7, fused: bool = True):
+                 chunk_len: int = 8, n_joints: int = 7, fused: bool = True,
+                 paged: bool = False, page_size: int = 16):
         self.model = model
         self.params = params
         self.tok = tokenizer
         self.chunk_len = chunk_len
         self.n_joints = n_joints
         self.fused = fused
+        self.paged = paged
+        self.page_size = page_size
         n_steps = chunk_len * n_joints
+        self.n_steps = n_steps
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, extra=n_steps)
         )
@@ -67,6 +80,39 @@ class CloudPolicy:
                 p, logits, cache, n_steps, tokenizer.action_base
             )[0]
         )
+        self._paged_fns = {}
+
+    def _paged_chunk_for(self, b: int, prompt: int):
+        """Jitted prefill -> page scatter -> paged chunk decode, per shape."""
+
+        from repro.runtime.kv_cache import PagedSpec
+
+        key = (b, prompt)
+        fn = self._paged_fns.get(key)
+        if fn is None:
+            page = self.page_size
+            maxp = -(-(prompt + self.n_steps) // page)
+            spec = PagedSpec(
+                num_pages=b * maxp, page_size=page, max_pages_per_seq=maxp
+            )
+            pt = np.arange(b * maxp, dtype=np.int32).reshape(b, maxp)
+            caps = np.full((b,), maxp * page, np.int32)
+
+            def run(p, tokens):
+                logits, dcache = self.model.prefill(
+                    p, {"tokens": tokens}, extra=0
+                )
+                pcache = self.model.init_paged_cache(b, spec)
+                pcache = self.model.cache_to_paged(
+                    dcache, pcache, jnp.asarray(pt), jnp.asarray(caps)
+                )
+                return self.model.decode_chunk(
+                    p, logits, pcache, self.n_steps, self.tok.action_base
+                )[0]
+
+            fn = jax.jit(run)
+            self._paged_fns[key] = fn
+        return fn
 
     def __call__(self, qd: np.ndarray, tau: np.ndarray) -> np.ndarray:
         """qd/tau [B, N] -> action chunk [B, k, N] via autoregressive decode."""
@@ -75,6 +121,12 @@ class CloudPolicy:
             [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
         )
         batch = {"tokens": jnp.asarray(obs)}
+        if self.paged:
+            fn = self._paged_chunk_for(obs.shape[0], obs.shape[1])
+            toks = np.asarray(fn(self.params, batch["tokens"]))
+            return self.tok.decode_action(toks).reshape(
+                -1, self.chunk_len, self.n_joints
+            )
         logits, cache = self._prefill(self.params, batch)
         if self.fused:
             toks = np.asarray(self._decode_chunk(self.params, logits, cache))
@@ -154,6 +206,9 @@ def serve_fleet(
     max_steps: int = 300,
     max_slots: int = 8,
     channel: Optional[ChannelConfig] = None,
+    partition_executor=None,
+    split_robots: Optional[List[int]] = None,
+    num_pages: Optional[int] = None,
     verbose: bool = True,
 ):
     """A robot fleet served by one continuous-batching cloud engine.
@@ -163,6 +218,11 @@ def serve_fleet(
     one decode round, and finished chunks land back in the robots' queues —
     possibly several ticks after the trigger, so the fleet genuinely
     exercises ragged in-flight batches.
+
+    With ``partition_executor`` set, robots listed in ``split_robots`` serve
+    through the edge-cloud split: their edge prefix runs per robot and the
+    cloud suffix joins the same paged decode rounds (and the same KV page
+    pool) as the cloud-only robots.
     """
 
     from repro.runtime.scheduler import ContinuousBatchingScheduler
@@ -181,7 +241,13 @@ def serve_fleet(
     sched = ContinuousBatchingScheduler(
         model, params, tokenizer,
         max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
+        num_pages=num_pages,
     )
+    split_set = set(split_robots or [])
+    if partition_executor is not None and split_set:
+        sched.attach_partition(partition_executor)
+    else:
+        split_set = set()
 
     cached = np.zeros((n_robots, chunk_len, n_joints), np.float32)
     actions = np.zeros((t_len, n_robots, n_joints), np.float32)
@@ -204,7 +270,10 @@ def serve_fleet(
         for r in np.flatnonzero(trig):
             if r in in_flight:
                 continue  # previous request still decoding; keep executing
-            sched.submit(int(r), eps[r].qd[t][None], eps[r].tau[t][None])
+            sched.submit(
+                int(r), eps[r].qd[t][None], eps[r].tau[t][None],
+                partitioned=int(r) in split_set,
+            )
             in_flight.add(int(r))
             n_off[r] += 1
         for res in sched.step():
@@ -220,12 +289,16 @@ def serve_fleet(
             )
         actions[t] = np.asarray(out.action)
 
+    pool = sched.pool_stats()
     if verbose:
         print(
             f"fleet={n_robots} steps={t_len} offloads={int(n_off.sum())} "
             f"mean_service_rounds={np.mean(wait_rounds) if wait_rounds else 0:.1f} "
             f"peak_batch={sched.peak_active} "
-            f"net_ms={np.mean(offload_ms) if offload_ms else 0:.1f}"
+            f"kv_pages={pool.pages_in_use}/{pool.pages_in_use + pool.pages_free} "
+            f"(high-water {pool.high_water}) "
+            + (f"mixed_rounds={sched.mixed_rounds} " if split_set else "")
+            + f"net_ms={np.mean(offload_ms) if offload_ms else 0:.1f}"
             f"±{np.std(offload_ms) if offload_ms else 0:.1f}"
         )
     return {
@@ -235,25 +308,26 @@ def serve_fleet(
         "service_rounds": wait_rounds,
         "offload_ms": offload_ms,
         "peak_batch": sched.peak_active,
+        "pool": pool,
+        "mixed_rounds": sched.mixed_rounds,
+        "split_robots": sorted(split_set),
     }
 
 
-def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
-                 partition: str = "none", network: str = "wan",
-                 verbose: bool = True):
-    """Build the serving policy, optionally split per the partition planner.
+def plan_fleet_partition(model: Model, params, arch: str,
+                         network: str = "wan", verbose: bool = True):
+    """Plan the full-arch cut and build a split executor over ``model``.
 
-    ``partition``: ``"none"`` (single-device CloudPolicy), ``"auto"`` (plan
-    the compatibility-optimal cut for the FULL ``arch`` config and map its
-    layer fraction onto this — possibly smoke-scale — model), or an integer
-    edge layer count for an explicit split.  ``network`` picks the channel
-    regime the planner prices (``lan`` / ``wan`` / ``congested``).
+    Returns ``(executor_or_None, plan)``.  Only a genuine split runs through
+    the executor: cloud-only and edge-only are single-device plans (and the
+    executor's ping-pong decode would misprice them), enc-dec stacks aren't
+    splittable yet — those return ``None`` and serving stays unpartitioned.
+    The plan's layer fraction is mapped onto this — possibly smoke-scale —
+    model (node cut 1, a stem-only edge, maps to layer cut 0: embedding on
+    the edge, every layer in the cloud).
     """
 
-    if partition == "none":
-        return CloudPolicy(model, params, tok), None
-
-    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+    from repro.partition.executor import PartitionExecutor
     from repro.partition.planner import NETWORK_PROFILES, plan_partition
 
     cfg = model.cfg
@@ -262,28 +336,58 @@ def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
     plan = plan_partition(full_cfg, channel=channel)
     if verbose:
         print(f"partition plan [{network}]:", plan.summary())
-    if partition == "auto":
-        # only a genuine split runs through the executor: cloud-only and
-        # edge-only are single-device plans (and the executor's ping-pong
-        # decode would misprice them), enc-dec stacks aren't splittable yet
-        if plan.mode != "split" or cfg.encoder_decoder:
-            if verbose:
-                why = (
-                    "encoder-decoder split execution not supported"
-                    if plan.mode == "split"
-                    else f"planner chose {plan.mode}"
-                )
-                print(f"{why}: serving unpartitioned")
-            return CloudPolicy(model, params, tok), plan
-        # node cut 1 (stem-only edge) maps to layer cut 0: the smoke model
-        # still splits — embedding on the edge, every layer in the cloud
-        frac = plan.cut_layer / max(full_cfg.num_layers, 1)
-        cut = int(round(frac * cfg.num_layers))
-    else:
-        cut = int(partition)
-    executor = PartitionExecutor(model, params, cut, channel=channel)
+    if plan.mode != "split" or cfg.encoder_decoder:
+        if verbose:
+            why = (
+                "encoder-decoder split execution not supported"
+                if plan.mode == "split"
+                else f"planner chose {plan.mode}"
+            )
+            print(f"{why}: serving unpartitioned")
+        return None, plan
+    frac = plan.cut_layer / max(full_cfg.num_layers, 1)
+    cut = int(round(frac * cfg.num_layers))
     if verbose:
         print(f"split execution: {cut}/{cfg.num_layers} layers on the edge")
+    return PartitionExecutor(model, params, cut, channel=channel), plan
+
+
+def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
+                 partition: str = "none", network: str = "wan",
+                 paged: bool = False, verbose: bool = True):
+    """Build the serving policy, optionally split per the partition planner.
+
+    ``partition``: ``"none"`` (single-device CloudPolicy), ``"auto"`` (plan
+    the compatibility-optimal cut for the FULL ``arch`` config and map its
+    layer fraction onto this — possibly smoke-scale — model), or an integer
+    edge layer count for an explicit split.  ``network`` picks the channel
+    regime the planner prices (``lan`` / ``wan`` / ``congested``).
+    ``paged`` routes the unpartitioned policy's decode through the paged KV
+    substrate instead of dense per-slot slabs (identical greedy chunks).
+    """
+
+    if partition == "none":
+        return CloudPolicy(model, params, tok, paged=paged), None
+
+    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+    from repro.partition.planner import NETWORK_PROFILES, plan_partition
+
+    if partition == "auto":
+        executor, plan = plan_fleet_partition(
+            model, params, arch, network, verbose=verbose
+        )
+        if executor is None:
+            return CloudPolicy(model, params, tok, paged=paged), plan
+        return PartitionedPolicy(executor, tok), plan
+
+    channel = NETWORK_PROFILES[network]
+    plan = plan_partition(get_config(arch), channel=channel)
+    if verbose:
+        print(f"partition plan [{network}]:", plan.summary())
+    cut = int(partition)
+    executor = PartitionExecutor(model, params, cut, channel=channel)
+    if verbose:
+        print(f"split execution: {cut}/{model.cfg.num_layers} layers on the edge")
     return PartitionedPolicy(executor, tok), plan
 
 
@@ -298,6 +402,8 @@ def main(argv=None):
                    help="'none', 'auto' (partition planner), or edge layer count")
     p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
                    help="channel regime the partition planner prices")
+    p.add_argument("--paged", action="store_true",
+                   help="single-robot decode through the paged KV substrate")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -305,10 +411,24 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
     if args.fleet:
+        executor = None
+        split = []
         if args.partition != "none":
-            raise SystemExit("--partition serves single-robot episodes; drop --fleet")
-        return serve_fleet(model, params, tok, n_robots=args.fleet, max_steps=args.steps)
-    policy, _ = build_policy(model, params, tok, args.arch, args.partition, args.network)
+            # mixed fleet: every second robot serves through the planned
+            # edge-cloud split; they share decode rounds with the rest
+            executor, _ = plan_fleet_partition(
+                model, params, args.arch, args.network
+            )
+            if executor is not None:
+                split = list(range(1, args.fleet, 2))
+        return serve_fleet(
+            model, params, tok, n_robots=args.fleet, max_steps=args.steps,
+            partition_executor=executor, split_robots=split,
+        )
+    policy, _ = build_policy(
+        model, params, tok, args.arch, args.partition, args.network,
+        paged=args.paged,
+    )
     return serve_episode(policy, task=args.task, max_steps=args.steps)
 
 

@@ -472,6 +472,63 @@ def attention_decode_step(
     return out, cache_k, cache_v
 
 
+def attention_decode_step_paged(
+    x: jax.Array,
+    params,
+    cfg: ModelConfig,
+    k_pool: jax.Array,      # [P+1, page, KV, Dh] shared pool; last page = trash
+    v_pool: jax.Array,
+    page_table: jax.Array,  # [B, MAXP] int32
+    cache_len: jax.Array,   # [B] (or scalar) tokens already resident per row
+    cap: jax.Array,         # [B] token capacity per row (0 = inactive row)
+    window: int,
+):
+    """One-token decode against the shared KV page pool.  x: [B,1,D].
+
+    The paged twin of ``attention_decode_step``: each row's new K/V lands at
+    the flat slot its page table maps ``cache_len`` to, then the batch
+    attends through ``ops.paged_decode_attention`` (Pallas on TPU, the exact
+    jnp gather oracle on CPU).  Rows at/over ``cap`` — idle scheduler rows,
+    rows decoding past their chunk — write the pool's trash page and attend
+    over at most ``cap`` tokens, so they can never corrupt live sequences.
+
+    Returns (out [B,1,D], new_k_pool, new_v_pool).
+    """
+
+    from repro.kernels import ops as kops
+
+    b = x.shape[0]
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    n_pages, page = k_pool.shape[0] - 1, k_pool.shape[1]
+    maxp = page_table.shape[1]
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(cache_len), (b,)).astype(jnp.int32)
+    cap_b = jnp.broadcast_to(jnp.atleast_1d(cap), (b,)).astype(jnp.int32)
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, nh, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, 1, nkv, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, 1, nkv, hd)
+    q = rope(q, pos_b[:, None], cfg.rope_theta)
+    k = rope(k, pos_b[:, None], cfg.rope_theta)
+
+    page_idx = jnp.minimum(pos_b // page, maxp - 1)
+    slot = page_table[jnp.arange(b), page_idx] * page + pos_b % page
+    slot = jnp.where(pos_b < cap_b, slot, n_pages * page)  # trash when full
+    flat_shape = ((n_pages + 1) * page, nkv, hd)
+    k_pool = (
+        k_pool.reshape(flat_shape).at[slot].set(k[:, 0].astype(k_pool.dtype))
+    ).reshape(k_pool.shape)
+    v_pool = (
+        v_pool.reshape(flat_shape).at[slot].set(v[:, 0].astype(v_pool.dtype))
+    ).reshape(v_pool.shape)
+
+    lens_eff = jnp.minimum(pos_b + 1, cap_b)
+    out = kops.paged_decode_attention(
+        q[:, 0], k_pool[:n_pages], v_pool[:n_pages], page_table, lens_eff,
+        window=window, logit_cap=cfg.attn_logit_softcap,
+    )[:, None]
+    out = out.reshape(b, 1, nh * hd) @ params["wo"].astype(x.dtype)
+    return out, k_pool, v_pool
+
+
 def cross_attention_cached(
     x: jax.Array,
     params,

@@ -31,6 +31,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
+from repro.runtime.kv_cache import PagedSpec, scatter_prompt_into_pool
 from repro.models.layers import (
     Axes,
     cross_entropy_loss,
@@ -294,14 +295,31 @@ class Model:
             x = x + out2
         return x, new_cache, aux
 
-    def _block_step(self, spec, p, x, cache, cache_len, enc_out=None, enc_pos=None):
-        """Single-token decode block apply."""
+    def _block_step(self, spec, p, x, cache, cache_len, enc_out=None, enc_pos=None,
+                    paged=None):
+        """Single-token decode block apply.
+
+        ``paged``: a ``(page_table [B, MAXP], cap [B])`` pair when the cache
+        holds paged attention entries (``kp``/``vp`` page pools) instead of
+        dense per-slot slabs; non-attention block state is identical in both
+        modes.  Dense mode (``paged=None``) is the parity oracle.
+        """
 
         cfg = self.cfg
         blk, is_moe, _ = spec
-        window = self._window_for(spec, cache["k"].shape[1] if blk == "attn" and "k" in cache else 0)
         h = rms_norm(x, p["norm1"], cfg.norm_eps)
-        if blk == "attn":
+        if blk == "attn" and "kp" in cache:
+            page_table, cap = paged
+            capacity = page_table.shape[1] * cache["kp"].shape[-3]
+            window = self._window_for(spec, capacity)
+            out, kp, vp = attn.attention_decode_step_paged(
+                h, p["attn"], cfg, cache["kp"], cache["vp"],
+                page_table, cache_len, cap, window,
+            )
+            new_cache = dict(cache)
+            new_cache["kp"], new_cache["vp"] = kp, vp
+        elif blk == "attn":
+            window = self._window_for(spec, cache["k"].shape[1] if "k" in cache else 0)
             out, ck, cv = attn.attention_decode_step(
                 h, p["attn"], cfg, cache["k"], cache["v"], cache_len, window,
                 impl=self.impl, ring=self.windowed_cache,
@@ -407,12 +425,16 @@ class Model:
     # single tokens); deep stacks keep the rolled scan for bounded HLO
     STEP_UNROLL_MAX = 8
 
-    def _run_unit_step(self, params_unit, x, cache_unit, cache_len, enc_out=None, enc_pos=None):
+    def _run_unit_step(self, params_unit, x, cache_unit, cache_len, enc_out=None, enc_pos=None,
+                       paged=None):
         def body(x, xs):
             p_list, c_list = xs
             new_c = []
             for j, spec in enumerate(self.unit):
-                x, cj = self._block_step(spec, p_list[j], x, c_list[j], cache_len, enc_out, enc_pos)
+                x, cj = self._block_step(
+                    spec, p_list[j], x, c_list[j], cache_len, enc_out, enc_pos,
+                    paged=paged,
+                )
                 new_c.append(cj)
             return x, tuple(new_c)
 
@@ -575,15 +597,21 @@ class Model:
         return self._logits(params, x[:, -1:]), cache
 
     def decode_step(self, params, token, cache):
-        """token [B,1] -> (logits [B,1,V], new cache)."""
+        """token [B,1] -> (logits [B,1,V], new cache).
+
+        Paged caches (built by ``init_paged_cache`` + ``cache_to_paged``)
+        carry a ``pt`` page table and per-row ``cap``; attention blocks then
+        read/write the shared page pool instead of dense per-slot slabs.
+        """
 
         cfg = self.cfg
         x = embed_lookup(token, params["embed"], cfg.d_model, cfg.scale_embeddings)
         x = x.astype(self.dtype)
         x = shard(x, "batch", None, "act_embed")
+        paged = (cache["pt"], cache["cap"]) if "pt" in cache else None
         x, new_unit = self._run_unit_step(
             params["unit"], x, cache["unit"], cache["len"],
-            cache.get("enc_out"), cache.get("enc_pos"),
+            cache.get("enc_out"), cache.get("enc_pos"), paged=paged,
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._logits(params, x)
@@ -629,13 +657,134 @@ class Model:
             s += batch["frontend"].shape[1]
         return s
 
-    def init_cache(self, batch: int, seq: int):
+    def init_cache(self, batch: int, seq: int, paged=None):
+        """Decode cache pytree.  ``paged``: a ``PagedSpec`` switches attention
+        entries from dense [r,B,S,KV,D] slabs to shared page pools (``seq``
+        is then ignored for attention — capacity comes from the spec)."""
+
+        if paged is not None:
+            return self.init_paged_cache(batch, paged)
         unit = [self._init_block_cache(spec, batch, seq) for spec in self.unit]
         cache = {"unit": unit, "len": jnp.zeros((), jnp.int32)}
         if self.cfg.encoder_decoder:
             cache["enc_out"] = jnp.zeros((batch, seq, self.cfg.d_model), self.dtype)
             cache["enc_pos"] = jnp.arange(seq)[None, :]
         return cache
+
+    # ------------------------------------------------------------------
+    # paged caches (the serving KV substrate)
+    # ------------------------------------------------------------------
+
+    def init_paged_cache(self, batch: int, spec):
+        """Paged decode cache: attention blocks hold (pool, page-table,
+        cache_len) triples drawn from one shared ``PagedSpec`` geometry.
+
+        Per attention layer the pool is ``[repeats, P+1, page, KV, D]`` —
+        one extra trash page absorbs writes from idle/over-capacity rows.
+        The page table (``pt`` [B, MAXP]) and per-row token capacity
+        (``cap`` [B]) are shared by every layer: sequences own the same
+        page ids at each depth, exactly like production paged-attention
+        engines.  Non-attention block state (Mamba/xLSTM) is O(1) per row
+        and stays dense.  Rows with ``cap == 0`` are inactive.
+        """
+
+        cfg, r = self.cfg, self.repeats
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        unit = []
+        for s in self.unit:
+            if s[0] == "attn":
+                z = jnp.zeros(
+                    (r, spec.num_pages + 1, spec.page_size, nkv, hd), self.dtype
+                )
+                unit.append({"kp": z, "vp": z})
+            else:
+                unit.append(self._init_block_cache(s, batch, spec.tokens_per_seq))
+        return {
+            "unit": unit,
+            "len": jnp.zeros((batch,), jnp.int32),
+            "pt": jnp.zeros((batch, spec.max_pages_per_seq), jnp.int32),
+            "cap": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_to_paged(self, cache, paged, page_table, caps, lens=None):
+        """Scatter a dense prefilled ``cache`` into ``paged`` pools.
+
+        ``page_table`` [B, MAXP] / ``caps`` [B] come from the host-side page
+        allocator; ``lens`` defaults to the prefill length broadcast over the
+        batch.  Jit-friendly (static shapes, traced indices); the returned
+        pytree drives ``decode_step``/``decode_chunk`` in paged mode and is
+        bit-identical to continuing from the dense cache.
+        """
+
+        pt = jnp.asarray(page_table, jnp.int32)
+        b = pt.shape[0]
+        if lens is None:
+            lens = jnp.broadcast_to(jnp.atleast_1d(cache["len"]), (b,))
+        lens = jnp.asarray(lens, jnp.int32)
+        scatter = jax.vmap(scatter_prompt_into_pool, in_axes=(0, 0, None, None))
+        unit = []
+        for entry_d, entry_p, spec in zip(cache["unit"], paged["unit"], self.unit):
+            if spec[0] == "attn":
+                e = {
+                    "kp": scatter(entry_p["kp"], entry_d["k"], pt, lens),
+                    "vp": scatter(entry_p["vp"], entry_d["v"], pt, lens),
+                }
+                if "xk" in entry_d:  # enc-dec cached cross K/V stays dense
+                    e["xk"], e["xv"] = entry_d["xk"], entry_d["xv"]
+                unit.append(e)
+            else:
+                unit.append(entry_d)
+        out = {
+            "unit": unit,
+            "len": lens,
+            "pt": pt,
+            "cap": jnp.asarray(caps, jnp.int32),
+        }
+        if "enc_out" in cache:
+            out["enc_out"], out["enc_pos"] = cache["enc_out"], cache["enc_pos"]
+        return out
+
+    def merge_prefill_into_paged(
+        self, cache, paged, page_table, row_idx, lens, caps
+    ):
+        """Merge an admission batch's dense prefill into the live paged cache.
+
+        ``cache`` is a fresh dense prefill over ``n`` new sequences;
+        ``row_idx`` [n] names the batch rows they take over (out-of-range
+        rows — admission padding — are dropped), ``page_table`` [n, MAXP]
+        their newly allocated pages, ``lens``/``caps`` [n] their prompt
+        lengths and token capacities (0 for padding rows, which routes every
+        write to the trash page).  The continuous-batching scheduler calls
+        this under one jit per admission-bucket size.
+        """
+
+        pt_new = jnp.asarray(page_table, jnp.int32)
+        row_idx = jnp.asarray(row_idx, jnp.int32)
+        lens = jnp.asarray(lens, jnp.int32)
+        caps = jnp.asarray(caps, jnp.int32)
+        scatter = jax.vmap(scatter_prompt_into_pool, in_axes=(0, 0, None, None))
+        unit = []
+        for entry_d, entry_p, spec in zip(cache["unit"], paged["unit"], self.unit):
+            if spec[0] == "attn":
+                unit.append({
+                    "kp": scatter(entry_p["kp"], entry_d["k"], pt_new, lens),
+                    "vp": scatter(entry_p["vp"], entry_d["v"], pt_new, lens),
+                })
+            else:
+                # per-row dense state: overwrite the claimed rows (axis 1 is
+                # batch under the stacked repeats dim)
+                unit.append(jax.tree.map(
+                    lambda live, new: live.at[:, row_idx].set(
+                        new.astype(live.dtype), mode="drop"
+                    ),
+                    entry_p, entry_d,
+                ))
+        return {
+            "unit": unit,
+            "len": paged["len"].at[row_idx].set(lens, mode="drop"),
+            "pt": paged["pt"].at[row_idx].set(pt_new, mode="drop"),
+            "cap": paged["cap"].at[row_idx].set(caps, mode="drop"),
+        }
 
     def _init_block_cache(self, spec, batch: int, seq: int):
         cfg, r = self.cfg, self.repeats

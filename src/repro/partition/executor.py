@@ -17,6 +17,12 @@ unpartitioned model — the property ``tests/test_partition.py`` pins.
 
 ``PartitionedPolicy`` is a drop-in ``CloudPolicy``: same observation-in /
 action-chunk-out interface, plus modeled channel telemetry per call.
+
+For fleet serving the executor additionally exposes a *batched cloud-suffix*
+mode (``edge_prefill`` / ``edge_step`` / ``suffix_prefill`` /
+``suffix_step``): per-robot edge prefixes feed one ragged batch of cut
+activations into a paged suffix that shares the continuous-batching
+scheduler's KV page pool — see ``runtime/scheduler.py``'s split lane.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ from repro.models.layers import embed_lookup, rms_norm
 from repro.models.model import Model
 from repro.partition.planner import interior_net_ms
 from repro.runtime.channel import ChannelConfig
+from repro.runtime.kv_cache import scatter_prompt_into_pool
 
 
 class PartitionExecutor:
@@ -188,6 +195,162 @@ class PartitionExecutor:
             step, (logits, state), None, length=n_steps
         )
         return jnp.moveaxis(toks, 0, 1), logits, state
+
+    # ------------------------------------------------------------------
+    # batched cloud-suffix serving (the scheduler's split lane)
+    # ------------------------------------------------------------------
+    #
+    # ``serve_fleet`` runs many partitioned robots against one cloud: each
+    # robot's edge prefix stays a private batch-1 dense-cache stack (it IS
+    # the robot's device), while the cloud suffix serves *all* of them as
+    # one ragged batch over the shared KV page pool — the same paged decode
+    # substrate (``Model._block_step`` paged mode) the cloud-only engine
+    # uses, drawing pages from the same allocator.
+
+    def build_suffix_fns(self, spec, extra: int) -> None:
+        """Compile edge/suffix entry points (``spec``: pool ``PagedSpec``)."""
+
+        self._suffix_spec = spec
+        self._edge_extra = extra
+        self._edge_prefill_j = jax.jit(self._edge_prefill_impl)
+        self._edge_step_j = jax.jit(self._edge_step_impl)
+        self._suffix_prefill_j = jax.jit(self._suffix_prefill_impl)
+        self._suffix_step_j = jax.jit(self._suffix_step_impl)
+
+    def init_suffix_pools(self, spec, rows: int):
+        """Per-cloud-layer paged caches: attention layers share page pools
+        (+1 trash page), recurrent layers keep dense per-row state."""
+
+        cfg = self.cfg
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        layers = []
+        for s in self.cloud_specs:
+            if s[0] == "attn":
+                z = jnp.zeros(
+                    (spec.num_pages + 1, spec.page_size, nkv, hd),
+                    self.model.dtype,
+                )
+                layers.append({"kp": z, "vp": z})
+            else:
+                c = self.model._init_block_cache(s, rows, spec.tokens_per_seq)
+                layers.append(jax.tree.map(lambda a: a[0], c))
+        return layers
+
+    def pad_suffix_rows(self, layers, pad: int):
+        """Grow the per-row state by ``pad`` rows (pools are shared)."""
+
+        out = []
+        for s, entry in zip(self.cloud_specs, layers):
+            if s[0] == "attn":
+                out.append(entry)
+            else:
+                out.append(jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0
+                    ),
+                    entry,
+                ))
+        return out
+
+    def edge_prefill(self, tokens: np.ndarray):
+        """Robot-side prompt prefill -> (cut activations [1,S,D], edge caches)."""
+
+        return self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+
+    def _edge_prefill_impl(self, sp, tokens):
+        batch = {"tokens": tokens}
+        x = self.model._embed_inputs(sp, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        caches = self._init_side_caches(
+            self.edge_specs, tokens.shape[0], x.shape[1] + self._edge_extra
+        )
+        new = []
+        for spec, p, c in zip(self.edge_specs, sp["edge"], caches):
+            x, nc, _ = self.model._block_seq(spec, p, x, positions, c)
+            new.append(nc)
+        return x, new
+
+    def edge_step(self, token: int, caches, length: int):
+        """One robot-side ping-pong leg: embed the sampled token, run the
+        edge prefix -> (cut activation [1,1,D], new edge caches)."""
+
+        return self._edge_step_j(
+            self.split_params,
+            jnp.asarray([[token]], jnp.int32),
+            caches,
+            jnp.asarray(length, jnp.int32),
+        )
+
+    def _edge_step_impl(self, sp, token, caches, length):
+        cfg = self.cfg
+        x = embed_lookup(token, sp["embed"], cfg.d_model, cfg.scale_embeddings)
+        x = x.astype(self.model.dtype)
+        new = []
+        for spec, p, c in zip(self.edge_specs, sp["edge"], caches):
+            x, nc = self.model._block_step(spec, p, x, c, length)
+            new.append(nc)
+        return x, new
+
+    def suffix_prefill(self, x, layers, pt_new, row_idx, lens, caps):
+        """Cloud-side prefill over a batch of shipped cut activations.
+
+        Scatters each new sequence's suffix KV into its allocated pages and
+        merges recurrent state at the claimed rows.  Returns
+        (new layers, last-token logits [n, V]).
+        """
+
+        return self._suffix_prefill_j(
+            self.split_params, jnp.asarray(x), layers, jnp.asarray(pt_new),
+            jnp.asarray(row_idx), jnp.asarray(lens), jnp.asarray(caps),
+        )
+
+    def _suffix_prefill_impl(self, sp, x, layers, pt_new, row_idx, lens, caps):
+        n, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s)[None, :]
+        caches = self._init_side_caches(self.cloud_specs, n, s)
+        x = x.astype(self.model.dtype)
+        new_layers = []
+        for spec, p, c, pool in zip(self.cloud_specs, sp["cloud"], caches, layers):
+            x, nc, _ = self.model._block_seq(spec, p, x, positions, c)
+            if spec[0] == "attn":
+                new_layers.append({
+                    "kp": scatter_prompt_into_pool(pool["kp"], nc["k"], pt_new, lens),
+                    "vp": scatter_prompt_into_pool(pool["vp"], nc["v"], pt_new, lens),
+                })
+            else:
+                new_layers.append(jax.tree.map(
+                    lambda live, st: live.at[row_idx].set(
+                        st.astype(live.dtype), mode="drop"
+                    ),
+                    pool, nc,
+                ))
+        x = rms_norm(x, sp["final_norm"], self.cfg.norm_eps)
+        logits = self.model._logits(sp, x[:, -1:])
+        return new_layers, logits[:, -1]
+
+    def suffix_step(self, x, layers, page_table, lens, caps):
+        """One batched cloud-suffix decode step over cut activations.
+
+        ``x`` [B,1,D] stacks every active row's shipped activation (idle
+        rows: zeros — their capacity is 0, so they write the trash page).
+        Returns (logits [B, V], new layers).
+        """
+
+        return self._suffix_step_j(
+            self.split_params, jnp.asarray(x), layers, jnp.asarray(page_table),
+            jnp.asarray(lens), jnp.asarray(caps),
+        )
+
+    def _suffix_step_impl(self, sp, x, layers, page_table, lens, caps):
+        x = x.astype(self.model.dtype)
+        paged = (page_table, caps)
+        new_layers = []
+        for spec, p, c in zip(self.cloud_specs, sp["cloud"], layers):
+            x, nc = self.model._block_step(spec, p, x, c, lens, paged=paged)
+            new_layers.append(nc)
+        x = rms_norm(x, sp["final_norm"], self.cfg.norm_eps)
+        logits = self.model._logits(sp, x)
+        return logits[:, -1], new_layers
 
     # ------------------------------------------------------------------
     # channel telemetry

@@ -63,6 +63,7 @@ def interior_net_ms(
     prompt_act_bytes: float,
     tok_act_bytes: float,
     n_decode_tokens: int,
+    pipelined: bool = False,
 ) -> Dict[str, float]:
     """Network cost of an interior cut, decomposed.
 
@@ -71,14 +72,24 @@ def interior_net_ms(
     embedding, so every action token ping-pongs — cut activation up, sampled
     token id down, one RTT each — which is exactly why interior cuts win on
     LAN and lose on WAN.
+
+    ``pipelined`` prices the overlapped split decode (ROADMAP "pipelined
+    split decode", pricing side only): while the cloud suffix computes token
+    ``t``, the edge prefix already runs token ``t+1`` behind it, so the
+    token-id downlink and the return half of the RTT hide under compute and
+    only ONE channel leg — half the RTT plus the cut-activation uplink —
+    stays exposed per decode token.
     """
 
     prefill = channel.rtt_ms + ship_ms(prompt_act_bytes, channel.uplink_mbps)
-    per_tok = (
-        channel.rtt_ms
-        + ship_ms(tok_act_bytes, channel.uplink_mbps)
-        + ship_ms(TOKEN_ID_BYTES, channel.downlink_mbps)
-    )
+    if pipelined:
+        per_tok = channel.rtt_ms / 2.0 + ship_ms(tok_act_bytes, channel.uplink_mbps)
+    else:
+        per_tok = (
+            channel.rtt_ms
+            + ship_ms(tok_act_bytes, channel.uplink_mbps)
+            + ship_ms(TOKEN_ID_BYTES, channel.downlink_mbps)
+        )
     return {
         "prefill_ms": prefill,
         "per_token_ms": per_tok,
@@ -127,6 +138,7 @@ class PartitionPlan:
     chunk_tokens: int
     edge_mem_gb: float
     channel: Dict[str, float] = field(default_factory=dict)
+    pipelined: bool = False   # overlapped split-decode pricing used
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -156,8 +168,15 @@ def enumerate_cuts(
     offload_fraction: float = DEFAULT_OFFLOAD_FRACTION,
     edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
     cloud_mem_gb: float = float("inf"),
+    pipelined: bool = False,
 ) -> List[CutEval]:
-    """Score every cut of ``graph`` under ``hw`` + ``channel``."""
+    """Score every cut of ``graph`` under ``hw`` + ``channel``.
+
+    ``pipelined``: price interior cuts with overlapped split decode — the
+    two sides compute concurrently (``max(edge, cloud)`` instead of their
+    sum on offloaded chunks) and each decode token pays one exposed channel
+    leg instead of the full ping-pong.  Single-device cuts are unaffected.
+    """
 
     channel = channel or hw.channel
     n = len(graph.nodes)
@@ -197,11 +216,21 @@ def enumerate_cuts(
                 graph.prompt_len * act_tok,
                 act_tok,
                 graph.chunk_tokens,
+                pipelined=pipelined,
             )["total_ms"]
 
         edge_ms = edge_exec * hw.rate_edge_ms_per_gb
         cloud_ms = hw.cloud_time_ms(cloud_exec) if f_eff > 0.0 else 0.0
-        total = edge_ms + f_eff * (net + cloud_ms)
+        if pipelined and 0 < cut < n:
+            # overlapped split decode: on offloaded chunks the edge prefix
+            # of token t+1 hides behind the cloud suffix of token t, so the
+            # compute term is max(edge, cloud), not their sum; ``net``
+            # already charges one exposed leg per token
+            total = (1.0 - f_eff) * edge_ms + f_eff * (
+                max(edge_ms, cloud_ms) + net
+            )
+        else:
+            total = edge_ms + f_eff * (net + cloud_ms)
         feasible = edge_gb <= edge_mem_gb + 1e-9 and cloud_gb <= cloud_mem_gb + 1e-9
         evals.append(
             CutEval(
@@ -232,11 +261,14 @@ def plan_partition(
     prompt_len: Optional[int] = None,
     chunk_tokens: Optional[int] = None,
     graph: Optional[InferenceGraph] = None,
+    pipelined: bool = False,
 ) -> PartitionPlan:
     """Choose the compatibility-optimal cut for ``cfg``.
 
     ``hw`` defaults to the calibrated anchor rates scaled to this
     architecture's parameter bytes (``arch_hardware_model``).
+    ``pipelined=True`` prices interior cuts with overlapped split decode
+    (never worse than the serial ping-pong, so splits only get MORE viable).
     """
 
     if graph is None:
@@ -253,6 +285,7 @@ def plan_partition(
         offload_fraction=offload_fraction,
         edge_mem_gb=edge_mem_gb,
         cloud_mem_gb=cloud_mem_gb,
+        pipelined=pipelined,
     )
     feasible = [e for e in evals if e.feasible]
     if not feasible:
@@ -288,4 +321,5 @@ def plan_partition(
         chunk_tokens=graph.chunk_tokens,
         edge_mem_gb=edge_mem_gb,
         channel=dataclasses.asdict(channel),
+        pipelined=pipelined,
     )

@@ -30,6 +30,26 @@ class OutOfPages(RuntimeError):
     """The pool has no free pages; the scheduler must defer admission."""
 
 
+@dataclass(frozen=True)
+class PagedSpec:
+    """Static page-pool geometry for the model's paged decode mode.
+
+    ``num_pages`` is the shared pool size; every sequence's page table has
+    ``max_pages_per_seq`` entries, so a sequence can hold at most
+    ``tokens_per_seq`` resident tokens.  The model allocates one extra
+    *trash* page per pool: rows at/over their capacity (idle scheduler rows,
+    over-decoded rows) write there instead of corrupting live pages.
+    """
+
+    num_pages: int
+    page_size: int
+    max_pages_per_seq: int
+
+    @property
+    def tokens_per_seq(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+
 class PageAllocator:
     """LIFO free-list over a fixed pool of page ids (host-side, O(1) ops)."""
 
@@ -38,15 +58,22 @@ class PageAllocator:
             raise ValueError("num_pages must be positive")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.high_water = 0
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
     def alloc(self, n: int = 1) -> List[int]:
         if n > len(self._free):
             raise OutOfPages(f"requested {n} pages, {len(self._free)} free")
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        self.high_water = max(self.high_water, self.num_in_use)
+        return out
 
     def free(self, pages: List[int]) -> None:
         for p in pages:
@@ -62,6 +89,32 @@ def _scatter_tokens(pool: jax.Array, slots: jax.Array, vals: jax.Array) -> jax.A
     """pool [P*page, KV, D]; slots [n] flat token slots; vals [n, KV, D]."""
 
     return pool.at[slots].set(vals.astype(pool.dtype))
+
+
+def scatter_prompt_into_pool(
+    pool: jax.Array,        # [P+1, page, KV, D]; the last page is trash
+    dense: jax.Array,       # [B, S, KV, D] prefilled (RoPE'd) prompt K or V
+    page_table: jax.Array,  # [B, MAXP] int32
+    lens: jax.Array,        # [B] int32 valid prompt tokens per row
+) -> jax.Array:
+    """Scatter a dense prefilled prompt cache into the shared page pool.
+
+    Positions at or beyond ``lens[b]`` (padding rows, masked admissions) are
+    routed to the trash page, so a single jitted scatter converts a whole
+    ragged admission batch.  Jit-friendly: shapes are static, indices traced.
+    """
+
+    p1, page, kvh, hd = pool.shape
+    b, s = dense.shape[0], dense.shape[1]
+    positions = jnp.arange(s)
+    pidx = jnp.minimum(positions // page, page_table.shape[1] - 1)   # [S]
+    slot = page_table[:, pidx] * page + positions % page             # [B, S]
+    slot = jnp.where(positions[None, :] < lens[:, None], slot, (p1 - 1) * page)
+    flat = pool.reshape(p1 * page, kvh, hd)
+    flat = flat.at[slot.reshape(-1)].set(
+        dense.reshape(b * s, kvh, hd).astype(pool.dtype)
+    )
+    return flat.reshape(pool.shape)
 
 
 @dataclass

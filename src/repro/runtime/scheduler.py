@@ -1,35 +1,36 @@
-"""Continuous-batching scheduler for the cloud action-chunk engine.
+"""Continuous-batching scheduler on the paged KV substrate.
 
-The seed served one robot at a time: a request had to wait for the previous
-chunk's full decode, and every decode step paid a host sync.  This scheduler
-keeps a fixed pool of *slots* (the decode batch) and lets requests join and
-leave it mid-flight:
+The seed served one robot at a time; PR 1 added continuous batching over a
+*fixed pool of slots*, each backed by a dense per-slot KV slab sized to the
+longest request — so slot count, not memory, bounded resident sequences.
+This scheduler drops the slot array: sequences are backed by page tables
+over one shared KV page pool (``Model``'s paged decode mode), and
 
-  * **admission** — pending requests are prefillled (one batched jitted
-    call) and merged into free slots of the live batch while other slots
-    keep decoding; per-slot ``cache["len"]`` is a vector, so the batch is
-    ragged from the model's point of view (``attention_decode_step``'s
-    vector path).
-  * **decode rounds** — each ``step()`` advances every active slot by
-    ``decode_block`` greedy action tokens through one fused on-device
-    ``lax.scan`` (``Model.decode_chunk``); the only host sync is the single
-    token read-back per round.
-  * **page accounting** — admission is gated by a ``PageAllocator`` over the
-    KV page pool (``runtime/kv_cache.py``): a request is admitted only if
-    its prompt + chunk worth of pages is free, and its pages return to the
-    free list at completion.  On TPU the same accounting drives the paged
-    pools behind ``kernels/paged_attention.py``; the CPU smoke path keeps
-    the model's dense per-slot cache.
+  * **admission** is bounded only by free pages — pending requests are
+    prefillled in one batched jitted call and their prompt KV is scattered
+    straight into the pool pages they were allocated (``Model.
+    merge_prefill_into_paged``);
+  * **batch rows** carry only O(1) per-sequence state (last logits, page
+    table row, recurrent block state); when more sequences are resident
+    than rows, the row arrays double — at most log2 jitted decode variants;
+  * **decode rounds** advance every active row by ``decode_block`` greedy
+    action tokens through one fused ``Model.decode_chunk`` (paged mode —
+    attention reads/writes go through ``ops.paged_decode_attention``); the
+    only host sync is the token read-back per round;
+  * **page accounting** is a single ``PageAllocator`` shared by cloud-only
+    sequences *and* (when a ``PartitionExecutor`` is attached) the cloud
+    suffixes of partitioned robots, so both kinds of robot share the same
+    decode rounds and the same admission currency: free pages.
 
-Robots at different trigger times therefore share decode batches — the
-multi-tenant serving mode the RAPID cloud side needs.
+Every ``ChunkResult`` carries a pool-utilization snapshot (pages in use /
+free / high-water) so serving telemetry sees KV pressure directly.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
-from typing import Deque, List, Optional
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,9 +38,18 @@ import numpy as np
 
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
-from repro.runtime.kv_cache import PageAllocator
+from repro.runtime.kv_cache import PageAllocator, PagedSpec
 
 DEFAULT_PAGE_SIZE = 16
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two >= n (jit-variant quantization)."""
+
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
@@ -47,6 +57,16 @@ class ChunkRequest:
     robot_id: int
     obs: np.ndarray          # [S_obs] observation token ids
     submitted_round: int
+    order: int = 0           # global FIFO position across both lanes
+
+
+@dataclass(frozen=True)
+class PoolStats:
+    """KV page-pool utilization snapshot."""
+
+    pages_in_use: int
+    pages_free: int
+    high_water: int
 
 
 @dataclass
@@ -56,24 +76,25 @@ class ChunkResult:
     submitted_round: int
     admitted_round: int
     completed_round: int
+    kind: str = "cloud"      # "cloud" (full stack) | "split" (cloud suffix)
+    pool: Optional[PoolStats] = None
 
 
 @dataclass
-class _Slot:
-    robot_id: int = -1
-    remaining: int = 0
-    pages: Optional[List[int]] = None
-    request: Optional[ChunkRequest] = None
-    admitted_round: int = -1
-    tokens: Optional[List[int]] = None
+class _Sequence:
+    """One page-table-backed in-flight sequence (replaces the old _Slot)."""
 
-    @property
-    def active(self) -> bool:
-        return self.remaining > 0
+    robot_id: int
+    row: int
+    remaining: int
+    pages: List[int]
+    request: ChunkRequest
+    admitted_round: int
+    tokens: List[int] = field(default_factory=list)
 
 
 class ContinuousBatchingScheduler:
-    """Fixed-slot continuous batcher over the model's ragged decode step."""
+    """Page-bounded continuous batcher over the model's paged decode mode."""
 
     def __init__(
         self,
@@ -94,102 +115,120 @@ class ContinuousBatchingScheduler:
         self.model = model
         self.params = params
         self.tok = tokenizer
+        # ``max_slots`` no longer caps residency — it sizes the initial row
+        # arrays and the *default* page pool (kept so the default capacity
+        # matches the old fixed-slot engine); pass ``num_pages`` to admit
+        # more sequences than rows, which then double on demand.
         self.max_slots = max_slots
         self.chunk_len = chunk_len
         self.n_joints = n_joints
         self.total_tokens = chunk_len * n_joints
         self.decode_block = decode_block or n_joints
-        # adaptive decode blocks: scale the per-round block with queue depth
-        # (deeper backlog -> larger blocks -> fewer host syncs / better
-        # throughput, at bounded added per-chunk latency).  Power-of-two
-        # doublings only, so at most log2(max/base) jitted round variants.
         self.adaptive_block = adaptive_block
         self.max_block = min(max_block or 4 * self.decode_block, self.total_tokens)
         self.prompt_len = 2 * n_joints
         self.round = 0
         self.peak_active = 0
+        self.mixed_rounds = 0        # rounds where both kinds decoded
+        self.last_round_kinds: Tuple[int, int] = (0, 0)  # (cloud, split)
 
         # KV page accounting: a request needs prompt + chunk tokens resident
         self.page_size = page_size
         self.pages_per_req = -(-(self.prompt_len + self.total_tokens) // page_size)
         pool = num_pages if num_pages is not None else self.pages_per_req * max_slots
         self.allocator = PageAllocator(pool)
+        self.paged_spec = PagedSpec(
+            num_pages=pool,
+            page_size=page_size,
+            max_pages_per_seq=self.pages_per_req,
+        )
+        self.cap_tokens = self.pages_per_req * page_size
 
         self._queue: Deque[ChunkRequest] = deque()
-        self._slots = [_Slot() for _ in range(max_slots)]
+        self._seqs: Dict[int, _Sequence] = {}    # row -> sequence
+        self._free_rows: List[int] = list(range(max_slots))
+        self._split: Optional["_SplitLane"] = None
+        self._order = 0
 
-        n_steps = self.total_tokens
-        base = tokenizer.action_base
-
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, extra=n_steps)
-        )
-
-        def admit(params, cache, logits_rows, obs_batch, admit_mask):
-            new_logits, pcache = model.prefill(
-                params, {"tokens": obs_batch}, extra=n_steps
-            )
-
-            def mrg(new, old):
-                m = admit_mask.reshape((1, max_slots) + (1,) * (new.ndim - 2))
-                return jnp.where(m, new, old)
-
-            unit = jax.tree.map(mrg, pcache["unit"], cache["unit"])
-            cache = dict(cache)
-            cache["unit"] = unit
-            cache["len"] = jnp.where(
-                admit_mask, jnp.int32(self.prompt_len), cache["len"]
-            )
-            logits_rows = jnp.where(
-                admit_mask[:, None], new_logits[:, -1], logits_rows
-            )
-            return cache, logits_rows
-
-        self._admit = jax.jit(admit)
-
-        self._token_floor = base
+        self._token_floor = tokenizer.action_base
+        self._admit_fns = {}
         self._decode_fns = {}
 
-        # live batch state: one dummy batched prefill fixes every pytree
-        # shape (and warms the compile); lengths start at zero
-        dummy = jnp.zeros((max_slots, self.prompt_len), jnp.int32)
-        logits, cache = self._prefill(params, {"tokens": dummy})
-        self._cache = dict(cache)
-        self._cache["len"] = jnp.zeros((max_slots,), jnp.int32)
-        self._logits = jnp.zeros_like(logits[:, -1])   # [B, Vpad]
-
-    def reset(self) -> None:
-        """Drop all queued/in-flight work; keep compiled fns and buffers."""
-
-        self._queue.clear()
-        for i, slot in enumerate(self._slots):
-            if slot.active:
-                self.allocator.free(slot.pages)
-                self._slots[i] = _Slot()
-        self._cache["len"] = jnp.zeros((self.max_slots,), jnp.int32)
-        self._logits = jnp.zeros_like(self._logits)
-        self.round = 0
-        self.peak_active = 0
+        # live batch state: logits rows + the paged cache (shared pools,
+        # per-row page table / length / capacity — zeros mean inactive)
+        self.rows = max_slots
+        logits_shape = jax.eval_shape(
+            lambda p, b: self.model.prefill(p, b, extra=0)[0],
+            params, {"tokens": jnp.zeros((1, self.prompt_len), jnp.int32)},
+        )
+        self._vdim = logits_shape.shape[-1]
+        self._logits = jnp.zeros((self.rows, self._vdim), logits_shape.dtype)
+        self._pcache = model.init_paged_cache(self.rows, self.paged_spec)
 
     # ------------------------------------------------------------------
     # request interface
     # ------------------------------------------------------------------
 
-    def submit(self, robot_id: int, qd: np.ndarray, tau: np.ndarray) -> None:
+    def attach_partition(self, executor, rows: int = 2) -> None:
+        """Serve partitioned robots' cloud suffixes in the same rounds.
+
+        ``executor`` is a ``PartitionExecutor`` over the same model family;
+        its suffix KV draws pages from this scheduler's allocator, so cloud-
+        only sequences and split suffixes compete for (and are bounded by)
+        the same pool.
+        """
+
+        self._split = _SplitLane(self, executor, rows)
+
+    def submit(
+        self, robot_id: int, qd: np.ndarray, tau: np.ndarray,
+        partitioned: bool = False,
+    ) -> None:
         """Queue one chunk request for ``robot_id`` (qd/tau [1, N])."""
 
         obs = np.concatenate(
             [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
         )[0]
-        self._queue.append(ChunkRequest(robot_id, obs, self.round))
+        self._order += 1
+        req = ChunkRequest(robot_id, obs, self.round, order=self._order)
+        if partitioned:
+            if self._split is None:
+                raise ValueError("no PartitionExecutor attached; call attach_partition")
+            self._split.queue.append(req)
+        else:
+            self._queue.append(req)
 
     @property
     def n_pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + (len(self._split.queue) if self._split else 0)
 
     @property
     def n_active(self) -> int:
-        return sum(s.active for s in self._slots)
+        return len(self._seqs) + (len(self._split.seqs) if self._split else 0)
+
+    def pool_stats(self) -> PoolStats:
+        return PoolStats(
+            pages_in_use=self.allocator.num_in_use,
+            pages_free=self.allocator.num_free,
+            high_water=self.allocator.high_water,
+        )
+
+    def reset(self) -> None:
+        """Drop all queued/in-flight work; keep compiled fns and buffers."""
+
+        self._queue.clear()
+        self._seqs.clear()
+        self._free_rows = list(range(self.rows))
+        self.allocator = PageAllocator(self.allocator.num_pages)
+        self._logits = jnp.zeros_like(self._logits)
+        self._pcache["len"] = jnp.zeros((self.rows,), jnp.int32)
+        self._pcache["cap"] = jnp.zeros((self.rows,), jnp.int32)
+        if self._split is not None:
+            self._split.reset()
+        self.round = 0
+        self.peak_active = 0
+        self.mixed_rounds = 0
+        self.last_round_kinds = (0, 0)
 
     # ------------------------------------------------------------------
     # scheduling
@@ -200,7 +239,7 @@ class ContinuousBatchingScheduler:
 
         Fixed-block mode (the default) always returns ``decode_block``.
         Adaptive mode doubles the block each time the pending backlog could
-        refill the whole slot pool, capped at ``max_block``.
+        refill a row-array's worth of sequences, capped at ``max_block``.
         """
 
         blk = self.decode_block
@@ -211,98 +250,370 @@ class ContinuousBatchingScheduler:
             depth -= self.max_slots
         return blk
 
-    def _decode_for(self, n_steps: int):
-        """Jitted decode round for one block size (cached per size)."""
+    def _grow_rows(self) -> None:
+        """Double the row arrays (page pools are shared and don't grow)."""
 
-        fn = self._decode_fns.get(n_steps)
+        old, new = self.rows, self.rows * 2
+        pad = new - old
+        self._logits = jnp.concatenate(
+            [self._logits, jnp.zeros((pad, self._vdim), self._logits.dtype)], 0
+        )
+        unit = []
+        for entry, spec in zip(self._pcache["unit"], self.model.unit):
+            if spec[0] == "attn":
+                unit.append(entry)  # shared pool: no batch dim
+            else:
+                unit.append(jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)], 1
+                    ),
+                    entry,
+                ))
+        self._pcache = {
+            "unit": unit,
+            "len": jnp.concatenate(
+                [self._pcache["len"], jnp.zeros((pad,), jnp.int32)]
+            ),
+            "pt": jnp.concatenate(
+                [self._pcache["pt"],
+                 jnp.zeros((pad, self.pages_per_req), jnp.int32)]
+            ),
+            "cap": jnp.concatenate(
+                [self._pcache["cap"], jnp.zeros((pad,), jnp.int32)]
+            ),
+        }
+        self._free_rows.extend(range(old, new))
+        self.rows = new
+
+    def _take_row(self) -> int:
+        if not self._free_rows:
+            self._grow_rows()
+        return self._free_rows.pop(0)
+
+    def _admit_for(self, n: int):
+        """Jitted admission (batched prefill + paged merge) per (n, rows)."""
+
+        key = (n, self.rows)
+        fn = self._admit_fns.get(key)
         if fn is None:
-            def decode_rounds(params, logits_rows, cache, active_mask):
-                toks, logits, cache = self.model.decode_chunk(
-                    params, logits_rows[:, None], cache, n_steps, self._token_floor
+            def admit(params, pcache, logits_live, obs, pt_new, row_idx, lens, caps):
+                new_logits, dcache = self.model.prefill(
+                    params, {"tokens": obs}, extra=0
                 )
-                # idle slots produced garbage writes at their own rows; pin
-                # their lengths back to zero so idle caches never grow
-                cache = dict(cache)
-                cache["len"] = jnp.where(active_mask, cache["len"], 0)
-                return toks, logits[:, -1], cache
+                pcache = self.model.merge_prefill_into_paged(
+                    dcache, pcache, pt_new, row_idx, lens, caps
+                )
+                logits_live = logits_live.at[row_idx].set(
+                    new_logits[:, -1], mode="drop"
+                )
+                return pcache, logits_live
 
-            fn = jax.jit(decode_rounds)
-            self._decode_fns[n_steps] = fn
+            fn = jax.jit(admit)
+            self._admit_fns[key] = fn
         return fn
 
+    def _decode_for(self, n_steps: int):
+        """Jitted decode round per (block size, rows)."""
+
+        key = (n_steps, self.rows)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            def decode_rounds(params, logits_rows, pcache):
+                toks, logits, pcache = self.model.decode_chunk(
+                    params, logits_rows[:, None], pcache, n_steps,
+                    self._token_floor,
+                )
+                return toks, logits[:, -1], pcache
+
+            fn = jax.jit(decode_rounds)
+            self._decode_fns[key] = fn
+        return fn
+
+    def _reserve(self, req: ChunkRequest) -> _Sequence:
+        pages = self.allocator.alloc(self.pages_per_req)
+        row = self._take_row()
+        seq = _Sequence(
+            robot_id=req.robot_id,
+            row=row,
+            remaining=self.total_tokens,
+            pages=pages,
+            request=req,
+            admitted_round=self.round,
+        )
+        self._seqs[row] = seq
+        return seq
+
     def _try_admit(self) -> None:
-        admit_mask = np.zeros(self.max_slots, bool)
-        obs_batch = np.zeros((self.max_slots, self.prompt_len), np.int64)
-        admitted = False
-        for i, slot in enumerate(self._slots):
-            if slot.active or not self._queue:
-                continue
-            if self.allocator.num_free < self.pages_per_req:
-                break  # KV pool exhausted: defer the rest of the queue
-            req = self._queue.popleft()
-            pages = self.allocator.alloc(self.pages_per_req)
-            self._slots[i] = _Slot(
-                robot_id=req.robot_id,
-                remaining=self.total_tokens,
-                pages=pages,
-                request=req,
-                admitted_round=self.round,
-                tokens=[],
-            )
-            admit_mask[i] = True
-            obs_batch[i] = req.obs
-            admitted = True
-        if admitted:
-            self._cache, self._logits = self._admit(
-                self.params,
-                self._cache,
-                self._logits,
-                jnp.asarray(obs_batch),
-                jnp.asarray(admit_mask),
-            )
+        """Admit pending requests FIFO across BOTH lanes — a partitioned
+        robot's suffix and a cloud-only robot compete for the same pages in
+        submission order, so neither kind can starve the other."""
+
+        new: List[_Sequence] = []
+        new_split = []
+        while self.allocator.num_free >= self.pages_per_req:
+            heads = []
+            if self._queue:
+                heads.append((self._queue[0].order, 0))
+            if self._split is not None and self._split.queue:
+                heads.append((self._split.queue[0].order, 1))
+            if not heads:
+                break
+            _, lane = min(heads)
+            if lane == 0:
+                new.append(self._reserve(self._queue.popleft()))
+            else:
+                new_split.append(self._split.reserve(self._split.queue.popleft()))
+        if new_split:
+            self._split.flush(new_split)
+        if not new:
+            return
+        n = _bucket(len(new))
+        obs = np.zeros((n, self.prompt_len), np.int64)
+        pt_new = np.zeros((n, self.pages_per_req), np.int32)
+        row_idx = np.full((n,), self.rows, np.int32)  # OOB rows -> dropped
+        lens = np.zeros((n,), np.int32)
+        caps = np.zeros((n,), np.int32)
+        for i, seq in enumerate(new):
+            obs[i] = seq.request.obs
+            pt_new[i] = seq.pages
+            row_idx[i] = seq.row
+            lens[i] = self.prompt_len
+            caps[i] = self.cap_tokens
+        self._pcache, self._logits = self._admit_for(n)(
+            self.params, self._pcache, self._logits,
+            jnp.asarray(obs), jnp.asarray(pt_new), jnp.asarray(row_idx),
+            jnp.asarray(lens), jnp.asarray(caps),
+        )
+
+    def _release(self, seq: _Sequence) -> None:
+        """Return pages + row; zero the row's capacity so the (still
+        batched) row can never write into pages a later admission reuses."""
+
+        self.allocator.free(seq.pages)
+        del self._seqs[seq.row]
+        self._free_rows.append(seq.row)
+        self._pcache["cap"] = self._pcache["cap"].at[seq.row].set(0)
 
     def step(self) -> List[ChunkResult]:
         """Admit pending requests, run one decode round, emit finished chunks."""
 
         self.round += 1
         self._try_admit()
-        active = np.asarray([s.active for s in self._slots])
-        self.peak_active = max(self.peak_active, int(active.sum()))
-        if not active.any():
-            return []
-        block = self._block_for_depth(self.n_pending)
-        toks, self._logits, self._cache = self._decode_for(block)(
-            self.params, self._logits, self._cache, jnp.asarray(active)
+        n_cloud, n_split = len(self._seqs), (
+            len(self._split.seqs) if self._split else 0
         )
-        toks = np.asarray(toks)  # [B, block] — one sync per round
+        self.last_round_kinds = (n_cloud, n_split)
+        self.mixed_rounds += n_cloud > 0 and n_split > 0
+        self.peak_active = max(self.peak_active, n_cloud + n_split)
         done: List[ChunkResult] = []
-        for i, slot in enumerate(self._slots):
-            if not slot.active:
-                continue
-            take = min(slot.remaining, block)
-            slot.tokens.extend(int(t) for t in toks[i, :take])
-            slot.remaining -= take
-            if slot.remaining == 0:
-                done.append(
-                    ChunkResult(
-                        robot_id=slot.robot_id,
-                        tokens=np.asarray(slot.tokens, np.int64),
-                        submitted_round=slot.request.submitted_round,
-                        admitted_round=slot.admitted_round,
+        block = self._block_for_depth(self.n_pending)
+        if n_cloud:
+            toks, self._logits, self._pcache = self._decode_for(block)(
+                self.params, self._logits, self._pcache
+            )
+            toks = np.asarray(toks)  # one sync per round
+            for seq in list(self._seqs.values()):
+                take = min(seq.remaining, block)
+                seq.tokens.extend(int(t) for t in toks[seq.row, :take])
+                seq.remaining -= take
+                if seq.remaining == 0:
+                    self._release(seq)
+                    done.append(ChunkResult(
+                        robot_id=seq.robot_id,
+                        tokens=np.asarray(seq.tokens, np.int64),
+                        submitted_round=seq.request.submitted_round,
+                        admitted_round=seq.admitted_round,
                         completed_round=self.round,
-                    )
-                )
-                # release this slot's KV pages back to the shared pool
-                self.allocator.free(slot.pages)
-                self._slots[i] = _Slot()
+                        kind="cloud",
+                        pool=self.pool_stats(),
+                    ))
+        if self._split is not None and n_split:
+            done.extend(self._split.step(block))
         return done
 
     def drain(self, max_rounds: int = 10_000) -> List[ChunkResult]:
-        """Run rounds until queue and slots are empty; return all results."""
+        """Run rounds until queue and batch are empty; return all results."""
 
         out: List[ChunkResult] = []
         rounds = 0
-        while (self._queue or self.n_active) and rounds < max_rounds:
+        while (self.n_pending or self.n_active) and rounds < max_rounds:
             out.extend(self.step())
             rounds += 1
         return out
+
+
+# ---------------------------------------------------------------------------
+# split lane: partitioned robots' cloud suffixes in the shared rounds
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _SplitSeq:
+    robot_id: int
+    row: int
+    remaining: int
+    length: int              # resident suffix tokens (host-tracked)
+    pages: List[int]
+    request: ChunkRequest
+    admitted_round: int
+    edge_cache: object       # dense per-robot edge-prefix caches (batch 1)
+    tokens: List[int] = field(default_factory=list)
+
+
+class _SplitLane:
+    """Batched cloud-suffix decode for partitioned robots.
+
+    Each decode round ping-pongs ``block`` times: every active robot's edge
+    prefix embeds its last sampled token (per-robot batch-1 step — each
+    robot owns its own edge device), the cut activations are stacked into
+    one ragged batch, and the executor's paged suffix advances them in a
+    single jitted call.  Suffix KV pages come from the *scheduler's*
+    allocator, so admission of split and cloud-only work is fungible.
+    """
+
+    def __init__(self, sched: ContinuousBatchingScheduler, executor, rows: int):
+        from repro.partition.executor import PartitionExecutor
+
+        assert isinstance(executor, PartitionExecutor)
+        self.sched = sched
+        self.ex = executor
+        self.rows = rows
+        self.queue: Deque[ChunkRequest] = deque()
+        self.seqs: Dict[int, _SplitSeq] = {}
+        self._free_rows: List[int] = list(range(rows))
+        spec = PagedSpec(
+            num_pages=sched.allocator.num_pages,
+            page_size=sched.page_size,
+            max_pages_per_seq=sched.pages_per_req,
+        )
+        self.spec = spec
+        self.ex.build_suffix_fns(spec, extra=sched.total_tokens)
+        self._layers = self.ex.init_suffix_pools(spec, rows)
+        # host-side row bookkeeping shipped into every suffix call
+        self._pt = np.zeros((rows, sched.pages_per_req), np.int32)
+        self._len = np.zeros((rows,), np.int32)
+        self._cap = np.zeros((rows,), np.int32)
+        self._logits = np.zeros((rows, sched._vdim), np.float32)
+
+    def reset(self) -> None:
+        self.queue.clear()
+        self.seqs.clear()
+        self._free_rows = list(range(self.rows))
+        self._len[:] = 0
+        self._cap[:] = 0
+
+    def _grow_rows(self) -> None:
+        old, new = self.rows, self.rows * 2
+        pad = new - old
+        self._layers = self.ex.pad_suffix_rows(self._layers, pad)
+        self._pt = np.concatenate(
+            [self._pt, np.zeros((pad, self.sched.pages_per_req), np.int32)]
+        )
+        self._len = np.concatenate([self._len, np.zeros((pad,), np.int32)])
+        self._cap = np.concatenate([self._cap, np.zeros((pad,), np.int32)])
+        self._logits = np.concatenate(
+            [self._logits, np.zeros((pad, self._logits.shape[1]), np.float32)]
+        )
+        self._free_rows.extend(range(old, new))
+        self.rows = new
+
+    def _take_row(self) -> int:
+        if not self._free_rows:
+            self._grow_rows()
+        return self._free_rows.pop(0)
+
+    def reserve(self, req: ChunkRequest) -> _SplitSeq:
+        sched = self.sched
+        pages = sched.allocator.alloc(sched.pages_per_req)
+        row = self._take_row()
+        # edge prefix runs on the robot's own device: batch-1 prefill
+        x_cut, edge_cache = self.ex.edge_prefill(req.obs[None])
+        seq = _SplitSeq(
+            robot_id=req.robot_id,
+            row=row,
+            remaining=sched.total_tokens,
+            length=sched.prompt_len,
+            pages=pages,
+            request=req,
+            admitted_round=sched.round,
+            edge_cache=edge_cache,
+        )
+        seq._x_cut = x_cut
+        self.seqs[row] = seq
+        return seq
+
+    def flush(self, new: List[_SplitSeq]) -> None:
+        """Batched cloud-suffix prefill over the reserved admissions."""
+
+        sched = self.sched
+        n = _bucket(len(new))
+        s = sched.prompt_len
+        x = np.zeros((n, s, self.ex.cfg.d_model), np.float32)
+        pt_new = np.zeros((n, sched.pages_per_req), np.int32)
+        row_idx = np.full((n,), self.rows, np.int32)
+        lens = np.zeros((n,), np.int32)
+        caps = np.zeros((n,), np.int32)
+        for i, seq in enumerate(new):
+            x[i] = np.asarray(seq._x_cut[0], np.float32)
+            pt_new[i] = seq.pages
+            row_idx[i] = seq.row
+            lens[i] = s
+            caps[i] = sched.cap_tokens
+            self._pt[seq.row] = seq.pages
+            self._len[seq.row] = s
+            self._cap[seq.row] = sched.cap_tokens
+        self._layers, logits_new = self.ex.suffix_prefill(
+            x, self._layers, pt_new, row_idx, lens, caps
+        )
+        logits_new = np.asarray(logits_new, np.float32)
+        for i, seq in enumerate(new):
+            self._logits[seq.row] = logits_new[i]
+            del seq._x_cut
+
+    def step(self, block: int) -> List[ChunkResult]:
+        sched = self.sched
+        done: List[ChunkResult] = []
+        floor = sched._token_floor
+        for _ in range(block):
+            active = [s for s in self.seqs.values() if s.remaining > 0]
+            if not active:
+                break
+            xs = np.zeros(
+                (self.rows, 1, self.ex.cfg.d_model), np.float32
+            )
+            for seq in active:
+                ls = self._logits[seq.row].copy()
+                ls[:floor] = -1e9
+                tok = int(np.argmax(ls))
+                seq.tokens.append(tok)
+                seq.remaining -= 1
+                # ping-pong: the sampled token ships edge-ward, the edge
+                # prefix embeds + runs it, the cut activation ships back
+                x_cut, seq.edge_cache = self.ex.edge_step(
+                    tok, seq.edge_cache, seq.length
+                )
+                xs[seq.row] = np.asarray(x_cut[:, 0], np.float32)
+                seq.length += 1
+            logits, self._layers = self.ex.suffix_step(
+                xs, self._layers, self._pt, self._len, self._cap
+            )
+            logits = np.asarray(logits, np.float32)
+            for seq in active:
+                self._logits[seq.row] = logits[seq.row]
+            self._len[[s.row for s in active]] += 1
+            for seq in list(active):
+                if seq.remaining == 0:
+                    sched.allocator.free(seq.pages)
+                    del self.seqs[seq.row]
+                    self._free_rows.append(seq.row)
+                    self._cap[seq.row] = 0
+                    done.append(ChunkResult(
+                        robot_id=seq.robot_id,
+                        tokens=np.asarray(seq.tokens, np.int64),
+                        submitted_round=seq.request.submitted_round,
+                        admitted_round=seq.admitted_round,
+                        completed_round=sched.round,
+                        kind="split",
+                        pool=sched.pool_stats(),
+                    ))
+        return done

@@ -227,6 +227,43 @@ def test_split_decode_matches_unpartitioned_policy(arch):
         assert policy.net_ms_log and policy.net_ms_log[0] > 0
 
 
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_pipelined_pricing_never_worse(arch):
+    """Overlapped split decode: interior cuts get cheaper, single-device
+    cuts are untouched, and the plan records the pricing mode."""
+
+    cfg = get_config(arch)
+    graph = build_graph(cfg)
+    hw = arch_hardware_model(int(graph.total_param_bytes))
+    for profile, channel in NETWORK_PROFILES.items():
+        serial = enumerate_cuts(graph, hw, channel)
+        pipe = enumerate_cuts(graph, hw, channel, pipelined=True)
+        n = len(graph.nodes)
+        for s, p in zip(serial, pipe):
+            assert p.total_ms <= s.total_ms + 1e-9, (arch, profile, s.cut)
+            if s.cut in (0, n):
+                assert abs(p.total_ms - s.total_ms) < 1e-9
+        # interior cuts must strictly benefit somewhere (the whole point)
+        assert any(
+            p.total_ms < s.total_ms - 1e-9
+            for s, p in zip(serial, pipe)
+            if 0 < s.cut < n
+        ), (arch, profile)
+        plan = plan_partition(cfg, channel=channel, pipelined=True)
+        assert plan.pipelined
+        assert plan.total_ms <= plan_partition(cfg, channel=channel).total_ms + 1e-9
+
+
+def test_pipelined_plan_json_roundtrip():
+    from repro.partition.planner import PartitionPlan
+
+    plan = plan_partition(
+        get_config("openvla-7b"), channel=NETWORK_PROFILES["lan"], pipelined=True
+    )
+    again = PartitionPlan.from_json(plan.to_json())
+    assert again.pipelined and again == plan
+
+
 def test_executor_rejects_bad_cuts():
     cfg, model, params = _f32_stack("xlstm-125m")
     with pytest.raises(ValueError):

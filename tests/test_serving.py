@@ -47,6 +47,18 @@ def test_fused_chunk_decode_bit_identical_to_loop(stack):
         np.testing.assert_array_equal(a_fused, a_loop)
 
 
+def test_paged_policy_matches_dense(stack):
+    """CloudPolicy(paged=True) must emit the dense policy's exact chunks."""
+
+    _, model, params, tok = stack
+    dense = CloudPolicy(model, params, tok)
+    paged = CloudPolicy(model, params, tok, paged=True)
+    rng = np.random.default_rng(17)
+    for b in (1, 3):
+        qd, tau = _obs(rng, b)
+        np.testing.assert_array_equal(dense(qd, tau), paged(qd, tau))
+
+
 def test_fused_chunk_tokens_in_action_range(stack):
     _, model, params, tok = stack
     policy = CloudPolicy(model, params, tok)
@@ -197,6 +209,138 @@ def test_serve_fleet_end_to_end(stack):
     assert len(out["offload_ms"]) == len(out["service_rounds"])
     if len(out["offload_ms"]) > 1:
         assert np.std(out["offload_ms"]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# page-bounded admission (the paged substrate replaces fixed slots)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admits_beyond_initial_rows(stack):
+    """Residency is bounded by free pages, not by the old slot count."""
+
+    _, model, params, tok = stack
+    pages_per_req = -(-(14 + 56) // 16)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=2, num_pages=5 * pages_per_req
+    )
+    policy = CloudPolicy(model, params, tok, fused=True)
+    rng = np.random.default_rng(8)
+    reqs = [(r, *_obs(rng)) for r in range(5)]
+    for r, qd, tau in reqs:
+        sched.submit(r, qd, tau)
+    sched.step()
+    assert sched.n_active == 5 > 2, "admission stopped at the old slot bound"
+    assert sched.rows >= 5, "row arrays failed to grow"
+    results = {res.robot_id: res for res in sched.drain()}
+    for r, qd, tau in reqs:
+        want = policy(qd, tau)[0]
+        got = tok.decode_action(results[r].tokens).reshape(8, 7)
+        np.testing.assert_array_equal(want, got)
+
+
+def test_chunk_result_reports_pool_utilization(stack):
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=2)
+    rng = np.random.default_rng(12)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng))
+    results = sched.drain()
+    assert len(results) == 2
+    for res in results:
+        assert res.pool is not None
+        total = res.pool.pages_in_use + res.pool.pages_free
+        assert total == sched.allocator.num_pages
+        assert res.pool.high_water >= res.pool.pages_in_use
+    # both admitted together: high-water saw both requests resident
+    assert results[0].pool.high_water == 2 * sched.pages_per_req
+    assert sched.pool_stats().pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# mixed fleet: partitioned + cloud-only robots share decode rounds
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def f32_stack():
+    # exact split parity is pinned on f32 (bit-level bf16 equality does not
+    # survive the materialized shipping boundary at the cut activation)
+    cfg = get_smoke_config("openvla-7b").replace(
+        dtype="float32", param_dtype="float32"
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = EpisodeTokenizer(cfg.vocab_size)
+    return cfg, model, params, tok
+
+
+def test_mixed_kinds_share_rounds_and_match_isolated(f32_stack):
+    """Cloud-only and split suffixes decode in the same scheduler rounds,
+    each reproducing its isolated-path chunk exactly."""
+
+    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+
+    _, model, params, tok = f32_stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=4)
+    sched.attach_partition(ex)
+    rng = np.random.default_rng(21)
+    reqs = [(r, *_obs(rng)) for r in range(4)]
+    for r, qd, tau in reqs:
+        sched.submit(r, qd, tau, partitioned=(r % 2 == 1))
+    results = {res.robot_id: res for res in sched.drain()}
+
+    assert sched.mixed_rounds > 0, "kinds never decoded in the same round"
+    assert {results[r].kind for r, _, _ in reqs} == {"cloud", "split"}
+
+    cloud = CloudPolicy(model, params, tok)
+    split = PartitionedPolicy(ex, tok)
+    for r, qd, tau in reqs:
+        want = (cloud if r % 2 == 0 else split)(qd, tau)[0]
+        got = tok.decode_action(results[r].tokens).reshape(8, 7)
+        np.testing.assert_array_equal(want, got, err_msg=f"robot {r}")
+
+
+def test_split_lane_shares_page_pool(f32_stack):
+    """Split suffixes draw from the same allocator as cloud sequences."""
+
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = f32_stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    # pool holds exactly two requests: one cloud + one split fill it
+    pages_per_req = -(-(14 + 56) // 16)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=4, num_pages=2 * pages_per_req
+    )
+    sched.attach_partition(ex)
+    rng = np.random.default_rng(22)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng), partitioned=True)
+    sched.submit(2, *_obs(rng))
+    sched.submit(3, *_obs(rng), partitioned=True)
+    sched.step()
+    assert sched.n_active == 2 and sched.n_pending == 2
+    assert sched.allocator.num_free == 0
+    results = sched.drain()
+    assert {res.robot_id for res in results} == {0, 1, 2, 3}
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_serve_fleet_mixed_end_to_end(stack):
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    out = serve_fleet(
+        model, params, tok, n_robots=3, max_steps=60, max_slots=2,
+        partition_executor=ex, split_robots=[1], verbose=False,
+    )
+    assert out["actions"].shape == (60, 3, 7)
+    assert out["mixed_rounds"] > 0
+    assert out["split_robots"] == [1]
+    assert out["pool"].high_water > 0
 
 
 # ---------------------------------------------------------------------------
