@@ -41,6 +41,11 @@ def main(argv=None) -> None:
     # paged engine: slot-bounded vs page-bounded admission concurrency
     _timed("paged_engine_concurrency", serving_bench.bench_paged_rows, detail)
 
+    # closed-loop redundancy-aware fleet vs always-offload (live engine)
+    from benchmarks import trigger_bench
+
+    _timed("trigger_decode_round_reduction", trigger_bench.bench_rows, detail)
+
     # partition planner: all architectures x network profiles (analytic)
     from benchmarks import partition_bench
 

@@ -52,6 +52,9 @@ def main(argv=None):
                    help="channel regime the partition planner prices")
     p.add_argument("--paged", action="store_true",
                    help="single-robot decode through the paged KV substrate")
+    p.add_argument("--trigger", default="always", choices=["always", "rapid"],
+                   help="fleet dispatch policy: always-offload or the "
+                        "closed-loop redundancy-aware RAPID trigger")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -77,17 +80,31 @@ def main(argv=None):
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             channel=NETWORK_PROFILES[args.network],
             partition_executor=executor, split_robots=split,
+            trigger=args.trigger,
         )
         served = len(out["service_rounds"])
         pool = out["pool"]
-        print(f"chunks served: {served} (peak decode batch {out['peak_batch']})")
+        tel = out["telemetry"]
+        print(f"chunks served: {served} (peak decode batch {out['peak_batch']}, "
+              f"{out['decode_rounds']} decode rounds)")
         print(f"kv pages: high-water {pool.high_water}"
               f"/{pool.pages_in_use + pool.pages_free}")
+        if args.trigger == "rapid":
+            print(f"redundancy-aware loop: {int(tel.replays.sum())} cached-chunk "
+                  f"replays, {int(tel.cancels.sum())} in-flight cancels, "
+                  f"realized f_off={tel.fleet_offload_fraction():.2f} "
+                  f"(per-robot {[round(float(f), 2) for f in tel.offload_fractions()]})")
         if split:
             print(f"rounds with both kinds decoding: {out['mixed_rounds']}")
         print(f"mean offload net: {np.mean(out['offload_ms']):.1f} ms (jittered)"
               if out["offload_ms"] else "no offloads")
         print(f"actions executed: {out['actions'].shape}")
+        if args.trigger == "rapid" and args.partition != "none":
+            # close the planner loop: re-price the cut with the fleet's
+            # realized offload fraction instead of the trigger-sim constant
+            from repro.launch.serve import replan_from_telemetry
+
+            replan_from_telemetry(args.arch, tel, args.network)
         return
 
     policy, _ = build_policy(

@@ -7,6 +7,13 @@ generator provides it; in a deployment the runtime engine fills it from the
 real ``serve_step``).  The dispatcher decides whether to preempt-and-overwrite
 (dispatch) or keep executing the cached chunk — exactly Algorithm 1.
 
+The per-step decision (trigger fire, queue refill, preemption, executed
+slot) is delegated to the shared fleet decision core
+(``runtime/policy.py``), so this simulator-facing adapter, the offline
+engine, and the live ``serve_fleet`` loop cannot drift apart.  This module
+only adds what the decision core deliberately leaves out: the chunk
+*contents* (cloud vs edge source selection and the executed action).
+
 All state is fixed-shape, so the whole closed loop vmaps over robot fleets
 and scans over episodes.
 """
@@ -14,7 +21,7 @@ and scans over episodes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +32,6 @@ from repro.core.trigger import (
     TriggerOutput,
     TriggerState,
     trigger_init,
-    trigger_step,
 )
 
 
@@ -86,22 +92,23 @@ def dispatcher_step(
     (pure offload mode — Algorithm 1's literal line 6).
     """
 
-    k = cfg.chunk_len
-    queue_empty = state.queue.head >= k
+    from repro.runtime import policy as rpolicy
 
-    # Algorithm 1 lines 1-5 + Eq.8 cooldown masking
-    trig_state, trig_out = trigger_step(
-        state.trigger,
-        frame,
-        cfg.trigger,
-        queue_empty=queue_empty if edge_chunk is None else None,
+    # Algorithm 1 lines 1-6 + Eq.8 masking: the shared decision core
+    pcfg = rpolicy.PolicyConfig(
+        trigger=cfg.trigger,
+        chunk_len=cfg.chunk_len,
+        on_empty="cloud" if edge_chunk is None else "edge",
     )
-    offload = trig_out.dispatch
-    edge_refill = (
-        jnp.zeros_like(offload)
-        if edge_chunk is None
-        else (queue_empty & ~offload)
+    # ``primed`` only matters for the fleet loop's "reuse" mode; the
+    # dispatcher's cloud/edge modes never consult it
+    pstate = rpolicy.FleetTriggerState(
+        trigger=state.trigger,
+        head=state.queue.head,
+        primed=jnp.zeros_like(state.queue.head, bool),
     )
+    pstate, dec = rpolicy.trigger_step(pstate, frame, pcfg)
+    offload, edge_refill = dec.offload, dec.replayed
 
     # line 7: preemption — overwrite Q with the fresh chunk
     refill = offload | edge_refill
@@ -109,18 +116,17 @@ def dispatcher_step(
         offload[..., None, None], cloud_chunk, edge_chunk
     )
     chunk = jnp.where(refill[..., None, None], source, state.queue.chunk)
-    head = jnp.where(refill, 0, state.queue.head)
 
     # line 9: dispatch action a_t <- pop(Q)
-    idx = jnp.minimum(head, k - 1)
     action = jnp.take_along_axis(
-        chunk, idx[..., None, None].astype(jnp.int32), axis=-2
+        chunk, dec.slot[..., None, None].astype(jnp.int32), axis=-2
     )[..., 0, :]
-    head = jnp.minimum(head + 1, k)
 
-    new_state = DispatcherState(trigger=trig_state, queue=QueueState(chunk, head))
+    new_state = DispatcherState(
+        trigger=pstate.trigger, queue=QueueState(chunk, pstate.head)
+    )
     return new_state, DispatchOutput(
-        action=action, offloaded=offload, edge_refill=edge_refill, trig=trig_out
+        action=action, offloaded=offload, edge_refill=edge_refill, trig=dec.trig
     )
 
 

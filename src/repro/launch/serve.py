@@ -15,7 +15,10 @@ Two serving modes:
     continuous-batching scheduler (``runtime/scheduler.py``): dispatch
     triggers become requests that join in-flight decode batches (admission
     bounded by free KV pages), and chunks arrive back asynchronously a few
-    scheduler rounds later.
+    scheduler rounds later.  ``--trigger rapid`` runs the closed-loop
+    redundancy-aware policy (cache replay on redundant depletions,
+    in-flight cancellation on contact-phase preemption) instead of
+    always-offload.
 
 ``--partition auto`` plans the compatibility-optimal edge-cloud cut for the
 full architecture (``repro.partition``) and serves the episode through the
@@ -37,10 +40,13 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core.dispatcher import DispatcherConfig, dispatcher_init, dispatcher_step
 from repro.core.kinematics import KinematicFrame
+from repro.core.trigger import TriggerConfig
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
 from repro.robotics.episodes import generate_episode
 from repro.runtime.channel import ChannelConfig, sample_latency_ms
+from repro.runtime.policy import FleetTelemetry, PolicyConfig
+from repro.runtime import policy as rpolicy
 
 
 class CloudPolicy:
@@ -209,24 +215,47 @@ def serve_fleet(
     partition_executor=None,
     split_robots: Optional[List[int]] = None,
     num_pages: Optional[int] = None,
+    trigger: str = "always",
+    trigger_cfg: Optional[TriggerConfig] = None,
+    record_streams: bool = False,
     verbose: bool = True,
 ):
     """A robot fleet served by one continuous-batching cloud engine.
 
-    Each control tick every robot's dispatcher runs (vmapped over the
-    fleet); triggered robots submit chunk requests, the scheduler advances
+    Each control tick the fleet's batched decision core runs
+    (``runtime/policy.py`` — the same ``trigger_step`` the offline engine
+    scans); triggered robots submit chunk requests, the scheduler advances
     one decode round, and finished chunks land back in the robots' queues —
     possibly several ticks after the trigger, so the fleet genuinely
     exercises ragged in-flight batches.
+
+    ``trigger`` selects the dispatch policy:
+
+      * ``"always"`` — every queue depletion forces a cloud fetch (the
+        always-offload serving mode of PRs 1-3);
+      * ``"rapid"``  — the closed-loop redundancy-aware mode: redundant
+        steps REPLAY the cached chunk and never touch the scheduler, only
+        kinematic trigger fires offload, and a fire while a previous
+        request is still decoding CANCELS the in-flight sequence
+        (``scheduler.cancel`` frees its pool pages / split-lane row) and
+        resubmits against the fresh observation.
 
     With ``partition_executor`` set, robots listed in ``split_robots`` serve
     through the edge-cloud split: their edge prefix runs per robot and the
     cloud suffix joins the same paged decode rounds (and the same KV page
     pool) as the cloud-only robots.
+
+    The returned ``telemetry`` (``FleetTelemetry``) carries per-robot
+    realized offload fractions — feed them back into
+    ``plan_partition(offload_fraction=...)`` (see ``replan_from_telemetry``)
+    to re-price partition cuts with the fleet's actual redundancy instead of
+    the global trigger-sim constant.
     """
 
     from repro.runtime.scheduler import ContinuousBatchingScheduler
 
+    if trigger not in ("always", "rapid"):
+        raise ValueError(f"trigger must be 'always' or 'rapid', got {trigger!r}")
     all_tasks = tasks or ["pick_place", "drawer_open", "peg_insertion"]
     eps = [
         generate_episode(all_tasks[i % len(all_tasks)], seed=seed + i)
@@ -234,9 +263,22 @@ def serve_fleet(
     ]
     t_len = min(max_steps, min(ep.q.shape[0] for ep in eps))
 
-    dcfg = DispatcherConfig(chunk_len=chunk_len, action_dim=n_joints)
-    state = dispatcher_init(dcfg, batch_shape=(n_robots,))
-    step_fn = jax.jit(lambda s, f, c: dispatcher_step(s, f, c, dcfg))
+    if trigger_cfg is None:
+        # rapid serving default: dispatch cadence aligned with the chunk
+        # horizon.  The trigger re-arms one step after the cooldown hits
+        # zero, so C = k-1 makes sustained-contact refreshes land exactly on
+        # chunk boundaries — no gratuitous mid-chunk preemption jerk and no
+        # stale replay step between consecutive fires.
+        cooldown = max(chunk_len - 1, 1) if trigger == "rapid" else 8
+        trigger_cfg = TriggerConfig(n_joints=n_joints, cooldown_steps=cooldown)
+    pcfg = PolicyConfig(
+        trigger=trigger_cfg,
+        chunk_len=chunk_len,
+        on_empty="cloud" if trigger == "always" else "reuse",
+    )
+    state = rpolicy.trigger_init(pcfg, (n_robots,))
+    step_fn = jax.jit(lambda s, f: rpolicy.trigger_step(s, f, pcfg))
+    telemetry = FleetTelemetry(n_robots, record_streams=record_streams)
 
     sched = ContinuousBatchingScheduler(
         model, params, tokenizer,
@@ -254,10 +296,15 @@ def serve_fleet(
     n_off = np.zeros(n_robots, np.int64)
     wait_rounds: List[int] = []
     in_flight = set()
-    # stochastic channel: every completed offload draws a jittered latency
+    # stochastic channel: every completed offload draws a jittered latency.
+    # Keys fold in (robot id, per-robot offload ordinal), so each robot's
+    # latency stream is reproducible across processes and fleet compositions
+    # regardless of the order chunks happen to complete in.
     channel = channel or ChannelConfig()
     net_key = jax.random.PRNGKey(seed + 7919)
     offload_ms: List[float] = []
+    offload_ms_by_robot: List[List[float]] = [[] for _ in range(n_robots)]
+    rows = np.arange(n_robots)
 
     for t in range(t_len):
         frame = KinematicFrame(
@@ -265,35 +312,53 @@ def serve_fleet(
             qd=jnp.asarray(np.stack([ep.qd[t] for ep in eps])),
             tau=jnp.asarray(np.stack([ep.tau[t] for ep in eps])),
         )
-        state, out = step_fn(state, frame, jnp.asarray(cached))
-        trig = np.asarray(out.offloaded)
+        state, dec = step_fn(state, frame)
+        telemetry.observe(dec)
+        # execute before this round's completions land: a chunk arriving in
+        # round t is first executable at t+1, exactly as the dispatcher did
+        actions[t] = cached[rows, np.asarray(dec.slot)]
+        trig = np.asarray(dec.offload)
         for r in np.flatnonzero(trig):
+            r = int(r)
             if r in in_flight:
-                continue  # previous request still decoding; keep executing
+                if trigger != "rapid":
+                    continue  # previous request still decoding; keep executing
+                # contact-phase preemption: the stale in-flight sequence is
+                # cancelled mid-decode and the fresh observation takes over
+                if sched.cancel(r):
+                    telemetry.note_cancel(r)
+                in_flight.discard(r)
             sched.submit(
-                int(r), eps[r].qd[t][None], eps[r].tau[t][None],
-                partitioned=int(r) in split_set,
+                r, eps[r].qd[t][None], eps[r].tau[t][None],
+                partitioned=r in split_set,
             )
-            in_flight.add(int(r))
+            in_flight.add(r)
             n_off[r] += 1
         for res in sched.step():
             cached[res.robot_id] = tokenizer.decode_action(
                 res.tokens
             ).reshape(chunk_len, n_joints)
             in_flight.discard(res.robot_id)
+            telemetry.note_completion(res.robot_id)
             wait_rounds.append(res.completed_round - res.submitted_round)
-            offload_ms.append(
-                sample_latency_ms(
-                    channel, chunk_len, jax.random.fold_in(net_key, len(offload_ms))
-                )
+            rkey = jax.random.fold_in(
+                jax.random.fold_in(net_key, res.robot_id),
+                len(offload_ms_by_robot[res.robot_id]),
             )
-        actions[t] = np.asarray(out.action)
+            ms = sample_latency_ms(channel, chunk_len, rkey)
+            offload_ms.append(ms)
+            offload_ms_by_robot[res.robot_id].append(ms)
 
     pool = sched.pool_stats()
     if verbose:
         print(
-            f"fleet={n_robots} steps={t_len} offloads={int(n_off.sum())} "
+            f"fleet={n_robots} steps={t_len} trigger={trigger} "
+            f"offloads={int(n_off.sum())} "
+            f"replays={int(telemetry.replays.sum())} "
+            f"cancels={int(telemetry.cancels.sum())} "
+            f"f_off={telemetry.fleet_offload_fraction():.2f} "
             f"mean_service_rounds={np.mean(wait_rounds) if wait_rounds else 0:.1f} "
+            f"decode_rounds={sched.decode_rounds} "
             f"peak_batch={sched.peak_active} "
             f"kv_pages={pool.pages_in_use}/{pool.pages_in_use + pool.pages_free} "
             f"(high-water {pool.high_water}) "
@@ -307,10 +372,16 @@ def serve_fleet(
         "actions": actions,
         "service_rounds": wait_rounds,
         "offload_ms": offload_ms,
+        "offload_ms_by_robot": offload_ms_by_robot,
         "peak_batch": sched.peak_active,
         "pool": pool,
         "mixed_rounds": sched.mixed_rounds,
+        "decode_rounds": sched.decode_rounds,
+        "cancelled": sched.cancelled,
         "split_robots": sorted(split_set),
+        "trigger": trigger,
+        "telemetry": telemetry,
+        "offload_fraction": telemetry.fleet_offload_fraction(),
     }
 
 
@@ -350,6 +421,49 @@ def plan_fleet_partition(model: Model, params, arch: str,
     if verbose:
         print(f"split execution: {cut}/{cfg.num_layers} layers on the edge")
     return PartitionExecutor(model, params, cut, channel=channel), plan
+
+
+def replan_from_telemetry(arch: str, telemetry, network: str = "wan",
+                          pipelined: bool = False, verbose: bool = True):
+    """Close the planner loop with the fleet's realized offload fraction.
+
+    Replaces the global trigger-sim constant with ``telemetry``'s realized
+    fleet offload fraction (a ``FleetTelemetry`` or a float), then compares
+    three prices at that fraction: the re-planned cut, the global-fraction
+    cut re-priced, and returns ``(plan, global_plan, repriced_global)``.
+    The re-planned cut is never worse than the re-priced global cut —
+    the planner minimizes over all cuts at the realized fraction.
+    """
+
+    from repro.partition.planner import (
+        NETWORK_PROFILES, evaluate_cut, plan_partition,
+    )
+
+    frac = (
+        telemetry if isinstance(telemetry, float)
+        else telemetry.fleet_offload_fraction()
+    )
+    # floor: a fleet that never offloaded still needs the occasional refresh
+    # priced in, and f=0 would degenerate interior cuts to prefix-only cost
+    frac = min(max(frac, 0.02), 1.0)
+    cfg = get_config(arch)
+    channel = NETWORK_PROFILES[network]
+    plan = plan_partition(
+        cfg, channel=channel, offload_fraction=frac, pipelined=pipelined
+    )
+    global_plan = plan_partition(cfg, channel=channel, pipelined=pipelined)
+    repriced = evaluate_cut(
+        cfg, global_plan.cut, channel=channel,
+        offload_fraction=frac, pipelined=pipelined,
+    )
+    if verbose:
+        print(f"replan @ realized f_off={frac:.3f}:", plan.summary())
+        print(
+            f"  global-fraction cut {global_plan.cut} re-priced at realized "
+            f"fraction: {repriced.total_ms:.1f}ms "
+            f"(re-planned: {plan.total_ms:.1f}ms)"
+        )
+    return plan, global_plan, repriced
 
 
 def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
@@ -404,6 +518,9 @@ def main(argv=None):
                    help="channel regime the partition planner prices")
     p.add_argument("--paged", action="store_true",
                    help="single-robot decode through the paged KV substrate")
+    p.add_argument("--trigger", default="always", choices=["always", "rapid"],
+                   help="fleet dispatch policy: always-offload or the "
+                        "closed-loop redundancy-aware RAPID trigger")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -421,10 +538,14 @@ def main(argv=None):
             )
             if executor is not None:
                 split = list(range(1, args.fleet, 2))
-        return serve_fleet(
+        out = serve_fleet(
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
+            trigger=args.trigger,
         )
+        if args.trigger == "rapid" and args.partition != "none":
+            replan_from_telemetry(args.arch, out["telemetry"], args.network)
+        return out
     policy, _ = build_policy(
         model, params, tok, args.arch, args.partition, args.network,
         paged=args.paged,

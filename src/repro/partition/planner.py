@@ -250,6 +250,44 @@ def enumerate_cuts(
     return evals
 
 
+def evaluate_cut(
+    cfg: ModelConfig,
+    cut: int,
+    hw: Optional[HardwareModel] = None,
+    channel: Optional[ChannelConfig] = None,
+    *,
+    offload_fraction: float = DEFAULT_OFFLOAD_FRACTION,
+    edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
+    cloud_mem_gb: float = float("inf"),
+    graph: Optional[InferenceGraph] = None,
+    pipelined: bool = False,
+) -> CutEval:
+    """Re-price one FIXED cut under a (possibly different) offload fraction.
+
+    This is how telemetry feedback closes the planner loop: a plan chosen
+    under the global trigger-sim fraction can be re-scored at the fleet's
+    *realized* per-robot fraction and compared against
+    ``plan_partition(offload_fraction=realized)`` — the re-planned cut is
+    never worse, because the planner minimizes over all cuts at that
+    fraction (see ``tests/test_partition.py``).
+    """
+
+    if graph is None:
+        graph = build_graph(cfg)
+    if hw is None:
+        hw = arch_hardware_model(int(graph.total_param_bytes))
+    evals = enumerate_cuts(
+        graph, hw, channel or hw.channel,
+        offload_fraction=offload_fraction,
+        edge_mem_gb=edge_mem_gb,
+        cloud_mem_gb=cloud_mem_gb,
+        pipelined=pipelined,
+    )
+    if not 0 <= cut < len(evals):
+        raise ValueError(f"cut {cut} outside [0, {len(evals) - 1}]")
+    return evals[cut]
+
+
 def plan_partition(
     cfg: ModelConfig,
     hw: Optional[HardwareModel] = None,

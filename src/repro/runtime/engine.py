@@ -5,9 +5,13 @@ vision-based entropy baseline, static/edge-only/cloud-only — with (b) the
 action-chunk queue semantics of Algorithm 1 and (c) the calibrated latency
 model, over the synthetic episode suite.
 
-The RAPID trigger stream comes from the *real* jitted `core.trigger` scan
-(the deployable artifact); all strategies then share one queue/accounting
-simulator so comparisons are apples-to-apples.
+The RAPID trigger stream comes from the *real* jitted decision core
+(`runtime.policy.rollout` — the same ``trigger_step`` the live
+``serve_fleet`` loop jits per control tick), and every strategy's queue
+semantics (refill / preempt / executed slot) replay through the same
+``runtime.policy`` queue transition — this module is a thin accounting
+adapter over the decision core, so the simulator and the serving runtime
+cannot drift.
 
 Accuracy model: executed action error vs the reference trajectory.
   * cloud chunks are exact at fill time and accumulate *staleness* error
@@ -20,7 +24,7 @@ Accuracy model: executed action error vs the reference trajectory.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +32,8 @@ import numpy as np
 
 from repro.core.baselines import EntropyTriggerConfig
 from repro.core.kinematics import KinematicFrame
-from repro.core.trigger import TriggerConfig, run_trigger
+from repro.core.trigger import TriggerConfig
+from repro.runtime.policy import PolicyConfig, QueueTrace, queue_replay, rollout
 from repro.robotics.episodes import (
     Episode,
     edge_policy_chunks,
@@ -39,7 +44,6 @@ from repro.robotics.noise import entropy_stream
 from repro.runtime.latency import (
     PROFILES,
     HardwareModel,
-    LatencyReport,
     SimCounters,
     evaluate,
 )
@@ -73,17 +77,25 @@ class EpisodeResult:
 
 
 def rapid_trigger_stream(
-    ep: Episode, cfg: TriggerConfig
+    ep: Episode, cfg: TriggerConfig, on_empty: str = "edge", chunk_len: int = 8
 ) -> np.ndarray:
-    """Dispatch booleans from the real jitted RAPID monitor."""
+    """Dispatch booleans from the real jitted decision core.
+
+    ``on_empty="edge"`` (the engine's simulation mode: an edge policy
+    absorbs routine depletions) leaves the trigger blind to queue state, so
+    the stream equals the pure kinematic monitor; ``"cloud"`` closes the
+    queue-depletion feedback loop (forced refills reset the cooldown),
+    matching ``serve_fleet(trigger="always")`` exactly.
+    """
 
     frames = KinematicFrame(
         q=jnp.asarray(ep.q)[:, None],
         qd=jnp.asarray(ep.qd)[:, None],
         tau=jnp.asarray(ep.tau)[:, None],
     )
-    _, out = jax.jit(lambda f: run_trigger(cfg, f))(frames)
-    return np.asarray(out.dispatch[:, 0])
+    pcfg = PolicyConfig(trigger=cfg, chunk_len=chunk_len, on_empty=on_empty)
+    _, dec = jax.jit(lambda f: rollout(pcfg, f))(frames)
+    return np.asarray(dec.offload[:, 0])
 
 
 @jax.jit
@@ -128,18 +140,56 @@ def simulate_queue(
     edge_chunks: Optional[np.ndarray],
     edge_exact: bool = False,        # edge_only: full model resident
 ) -> EpisodeResult:
-    t_len = ep.critical.shape[0]
-    k = cfg.chunk_len
-    ref = ep.ref_actions
-    cloud = reference_chunks(ep, k)
+    """Replay ``dispatch`` through the shared queue core, then score it."""
 
-    head = k  # empty
+    trace = queue_replay(
+        np.asarray(dispatch, bool), cfg.chunk_len,
+        on_empty="edge" if edge_refill_allowed else "cloud",
+    )
+    return score_trace(
+        ep, trace, cfg,
+        local_src="edge", edge_chunks=edge_chunks, edge_exact=edge_exact,
+    )
+
+
+def score_trace(
+    ep: Episode,
+    trace: QueueTrace,
+    cfg: EngineConfig,
+    local_src: str = "edge",         # what a local refill means: "edge" policy
+    edge_chunks: Optional[np.ndarray] = None,  # chunk or cached-chunk "reuse"
+    edge_exact: bool = False,        # edge_only: full model resident
+) -> EpisodeResult:
+    """Error/latency accounting over a decision trace.
+
+    The trace (cloud refills, local refills, preemptions, executed slots)
+    comes from the decision core — either replayed from a precomputed
+    stream (``policy.queue_replay``) or recorded live from a closed-loop
+    fleet (``FleetTelemetry.streams``) — so offline scores and serving
+    telemetry describe the *same* decisions.
+
+    ``local_src="reuse"`` scores redundancy-aware cache replay — the
+    paper's step-wise redundancy asymmetry:
+
+      * a replay during a REDUNDANT step re-anchors the plan (``fill_time``
+        advances): in a highly-predictable phase a fresh cloud query would
+        return ≈ the cached chunk, so replaying it loses nothing;
+      * a replay during a CRITICAL step does NOT re-anchor: the stale
+        pre-contact plan keeps executing and both the action mismatch and
+        the staleness penalty keep growing until a trigger fire refreshes
+        it — which is exactly what a good trigger prevents.
+    """
+
+    t_len = ep.critical.shape[0]
+    ref = ep.ref_actions
+    cloud = reference_chunks(ep, cfg.chunk_len)
+
     fill_time = -1
     fill_src = "none"
     err = np.zeros(t_len, np.float32)
     n_off = n_edge = n_intr = 0
-    offload_steps = np.zeros(t_len, bool)
-    preempt_steps = np.zeros(t_len, bool)
+    offload_steps = np.asarray(trace.refill_cloud, bool).copy()
+    preempt_steps = np.asarray(trace.preempt, bool).copy()
     # purposive-preemption windows (identical to the spurious accounting
     # below): imminent contact within the deceleration blend, phase
     # boundaries, and final deceleration to rest
@@ -154,17 +204,9 @@ def simulate_queue(
     purposive = crit_soon_p | bound_p
 
     for t in range(t_len):
-        refill_cloud = bool(dispatch[t])
-        refill_edge = False
-        if head >= k and not refill_cloud:
-            if edge_refill_allowed:
-                refill_edge = True
-            else:
-                refill_cloud = True
-        if refill_cloud:
-            if 0 < head < k:
+        if trace.refill_cloud[t]:
+            if trace.preempt[t]:
                 n_intr += 1
-                preempt_steps[t] = True
                 err[t] += cfg.preempt_jerk
                 if not purposive[t]:
                     # spurious mid-motion interruption: the manipulator takes
@@ -172,16 +214,21 @@ def simulate_queue(
                     # triggers "disrupt the physical continuity of motion")
                     hi = min(t + 4, t_len)
                     err[t:hi] += cfg.preempt_jerk * 0.8
-            head = 0
             fill_time, fill_src = t, "cloud"
             n_off += 1
-            offload_steps[t] = True
-        elif refill_edge:
-            head = 0
-            fill_time, fill_src = t, "edge"
-            n_edge += 1
+        elif trace.refill_local[t]:
+            if local_src == "edge":
+                # only genuine edge-model inferences are counted (and later
+                # priced); a cache replay is a free queue-pointer reset
+                n_edge += 1
+                fill_time, fill_src = t, "edge"
+            elif fill_src == "cloud" and not ep.critical[t]:
+                # "reuse" in a redundant step: the cached plan stays
+                # execution-valid, re-anchor it (see docstring)
+                fill_time = t
+            # "reuse" in a critical step: stale plan keeps executing
 
-        idx = min(head, k - 1)
+        idx = int(trace.slot[t])
         if fill_src == "cloud":
             a = cloud[fill_time, idx]
             # staleness only hurts during contact-rich (critical) phases
@@ -195,7 +242,6 @@ def simulate_queue(
         else:  # nothing cached yet
             a = np.zeros_like(ref[t])
         err[t] += float(np.linalg.norm(a - ref[t]) / max(np.linalg.norm(ref[t]), 0.2))
-        head = min(head + 1, k)
 
     crit = ep.critical
     # execution accuracy: fraction of steps tracked within tolerance
@@ -219,7 +265,7 @@ def simulate_queue(
     n_spur = int((offload_steps & preempt_steps & ~legit).sum())
     counters = SimCounters(
         n_steps=t_len,
-        n_chunks=max(t_len // k, 1),
+        n_chunks=max(t_len // cfg.chunk_len, 1),
         n_offloads=n_off,
         n_edge_infer=n_edge,
         n_interruptions=n_intr,

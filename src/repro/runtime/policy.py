@@ -1,0 +1,315 @@
+"""Fleet-level redundancy-aware decision core (the closed-loop trigger).
+
+One module owns the per-tick offload decision for EVERY consumer of
+Algorithm 1: the offline engine (``runtime/engine.py``), the single-robot
+dispatcher (``core/dispatcher.py``) and the live fleet loop
+(``launch/serve.py serve_fleet``) are all thin adapters over the same
+``trigger_step`` — so the simulator and the serving runtime cannot drift.
+
+The decision state per robot is O(1) and fixed-shape: the kinematic trigger
+state (``core/trigger``) plus the cached-chunk queue head.  ``trigger_step``
+vmaps over robot fleets and scans over episodes; the fleet loop jits one
+batched call per control tick.
+
+Queue-depletion policy (``PolicyConfig.on_empty``):
+
+  * ``"cloud"``  — Algorithm 1's literal line 6: a depleted queue forces a
+    cloud dispatch (and resets the trigger cooldown).  This is the
+    always-offload serving mode PRs 1-3 shipped.
+  * ``"edge"``   — a small resident edge policy refills routine depletions;
+    only genuine trigger fires hit the cloud (the engine's simulation mode).
+  * ``"reuse"``  — redundancy-aware serving without an edge model: a
+    depleted queue REPLAYS the cached chunk (head wraps to 0, contents
+    untouched) and never touches the scheduler; only trigger fires offload.
+
+``FleetTelemetry`` accumulates the realized per-robot decision statistics —
+in particular the realized offload fraction (cloud refills / all chunk
+refill decisions) that ``partition/planner.py`` consumes in place of the
+global trigger-sim fraction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kinematics as kin
+from repro.core.trigger import (
+    TriggerConfig,
+    TriggerOutput,
+    TriggerState,
+    trigger_init as kin_trigger_init,
+    trigger_step as kin_trigger_step,
+)
+
+ON_EMPTY_MODES = ("cloud", "edge", "reuse")
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    trigger: TriggerConfig = field(default_factory=TriggerConfig)
+    chunk_len: int = 8          # k — action-chunk horizon
+    on_empty: str = "reuse"     # see module docstring
+
+    def __post_init__(self):
+        if self.on_empty not in ON_EMPTY_MODES:
+            raise ValueError(f"on_empty must be one of {ON_EMPTY_MODES}")
+
+
+class FleetTriggerState(NamedTuple):
+    """Per-robot decision state: kinematic monitor + queue head."""
+
+    trigger: TriggerState
+    head: jax.Array          # [...] int32 next chunk index (== k -> empty)
+    primed: jax.Array        # [...] bool — has ever fetched a chunk
+
+
+class TriggerDecision(NamedTuple):
+    offload: jax.Array       # bool — cloud refill this tick (incl. forced)
+    replayed: jax.Array      # bool — local refill: edge policy or cache replay
+    preempt: jax.Array       # bool — cloud refill mid-chunk (0 < head < k)
+    slot: jax.Array          # int32 — chunk index executed this tick
+    trig: TriggerOutput      # the raw kinematic monitor outputs
+
+
+def trigger_init(cfg: PolicyConfig, batch_shape: Tuple[int, ...] = ()) -> FleetTriggerState:
+    return FleetTriggerState(
+        trigger=kin_trigger_init(cfg.trigger, batch_shape),
+        head=jnp.full(batch_shape, cfg.chunk_len, jnp.int32),  # start empty
+        primed=jnp.zeros(batch_shape, bool),
+    )
+
+
+def _forced(queue_empty, primed, cfg: PolicyConfig):
+    """Queue-depletion fetches the mode forces cloudward.
+
+    ``"cloud"``: every depletion; ``"reuse"``: only the bootstrap fetch —
+    an empty queue that has NEVER been filled has nothing to replay, so the
+    first chunk must come from the cloud; ``"edge"``: never (the edge
+    policy absorbs all depletions).
+    """
+
+    if cfg.on_empty == "cloud":
+        return queue_empty
+    if cfg.on_empty == "reuse":
+        return queue_empty & ~primed
+    return jnp.zeros_like(queue_empty)
+
+
+def _queue_transition(head, primed, offload, queue_empty, cfg: PolicyConfig):
+    """Algorithm-1 queue semantics given this tick's cloud decision.
+
+    Shared by the streaming step below and the offline ``queue_replay`` so
+    both paths take identical refill/preempt/slot decisions.
+    """
+
+    k = cfg.chunk_len
+    # forcing is folded into ``offload`` by the streaming trigger (cooldown
+    # reset); the explicit or keeps precomputed offline streams equivalent
+    offload = offload | _forced(queue_empty, primed, cfg)
+    if cfg.on_empty == "cloud":
+        replayed = jnp.zeros_like(offload)
+    else:
+        replayed = queue_empty & ~offload
+    preempt = offload & (head > 0) & ~queue_empty
+    head = jnp.where(offload | replayed, 0, head)
+    slot = jnp.minimum(head, k - 1)
+    new_head = jnp.minimum(head + 1, k)
+    return new_head, primed | offload, offload, replayed, preempt, slot
+
+
+def trigger_step(
+    state: FleetTriggerState,
+    frame: kin.KinematicFrame,
+    cfg: PolicyConfig,
+) -> Tuple[FleetTriggerState, TriggerDecision]:
+    """One control tick of the closed-loop decision core (batched)."""
+
+    queue_empty = state.head >= cfg.chunk_len
+    forced = _forced(queue_empty, state.primed, cfg)
+    trig_state, trig_out = kin_trigger_step(
+        state.trigger,
+        frame,
+        cfg.trigger,
+        # forced fetches flow through the kinematic step so they reset the
+        # cooldown exactly like an organic dispatch (Eq. 8)
+        queue_empty=forced if cfg.on_empty != "edge" else None,
+    )
+    head, primed, offload, replayed, preempt, slot = _queue_transition(
+        state.head, state.primed, trig_out.dispatch, queue_empty, cfg
+    )
+    return (
+        FleetTriggerState(trigger=trig_state, head=head, primed=primed),
+        TriggerDecision(
+            offload=offload, replayed=replayed, preempt=preempt,
+            slot=slot, trig=trig_out,
+        ),
+    )
+
+
+def rollout(
+    cfg: PolicyConfig,
+    frames: kin.KinematicFrame,          # [T, ..., N] streams
+    state: Optional[FleetTriggerState] = None,
+) -> Tuple[FleetTriggerState, TriggerDecision]:
+    """Scan the decision core over an episode — the offline twin of the
+    fleet loop's per-tick jitted step (identical decisions by construction).
+    """
+
+    if state is None:
+        state = trigger_init(cfg, frames.q.shape[1:-1])
+
+    def step(s, f):
+        return trigger_step(s, kin.KinematicFrame(*f), cfg)
+
+    return jax.lax.scan(step, state, tuple(frames))
+
+
+class QueueTrace(NamedTuple):
+    """Per-step queue decisions for a precomputed dispatch stream."""
+
+    refill_cloud: np.ndarray   # bool [T]
+    refill_local: np.ndarray   # bool [T] — edge refill or cache replay
+    preempt: np.ndarray        # bool [T]
+    slot: np.ndarray           # int32 [T]
+
+
+def queue_replay(
+    dispatch: np.ndarray, chunk_len: int, on_empty: str = "edge"
+) -> QueueTrace:
+    """Replay the queue transition over an external dispatch stream.
+
+    Used by the offline engine for strategies whose trigger stream is
+    precomputed (vision baseline, static policies): the queue semantics are
+    the exact ``_queue_transition`` the live fleet runs.
+    """
+
+    cfg = PolicyConfig(chunk_len=chunk_len, on_empty=on_empty)
+
+    def step(carry, d):
+        head, primed = carry
+        head, primed, offload, replayed, preempt, slot = _queue_transition(
+            head, primed, d, head >= chunk_len, cfg
+        )
+        return (head, primed), (offload, replayed, preempt, slot)
+
+    _, (off, rep, pre, slot) = jax.lax.scan(
+        step, (jnp.int32(chunk_len), jnp.asarray(False)),
+        jnp.asarray(dispatch, bool),
+    )
+    return QueueTrace(
+        refill_cloud=np.asarray(off),
+        refill_local=np.asarray(rep),
+        preempt=np.asarray(pre),
+        slot=np.asarray(slot, np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# realized fleet telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FleetTelemetry:
+    """Per-robot realized decision statistics from a closed-loop run.
+
+    ``offload_fractions`` is the feedback signal into the partition planner:
+    the fraction of *chunk refill decisions* (cloud fetch vs local
+    refill/replay) a robot actually sent cloudward — the live counterpart of
+    the planner's global trigger-sim ``DEFAULT_OFFLOAD_FRACTION``.
+    """
+
+    n_robots: int
+    record_streams: bool = False
+    ticks: int = 0
+    fires: np.ndarray = None        # cloud refill DECISIONS (in "always"
+    # mode the serving loop skips fires landing while a request is already
+    # in flight, so submissions can be fewer; in "rapid" mode every fire
+    # submits — stale in-flight work is cancelled first)
+    replays: np.ndarray = None      # local refills (edge / cache replay)
+    preempts: np.ndarray = None     # mid-chunk cloud refills
+    cancels: np.ndarray = None      # in-flight sequences cancelled
+    completions: np.ndarray = None  # chunks that arrived back
+    offload_stream: List[np.ndarray] = field(default_factory=list)
+    replay_stream: List[np.ndarray] = field(default_factory=list)
+    preempt_stream: List[np.ndarray] = field(default_factory=list)
+    slot_stream: List[np.ndarray] = field(default_factory=list)
+
+    def __post_init__(self):
+        z = lambda: np.zeros(self.n_robots, np.int64)
+        self.fires, self.replays = z(), z()
+        self.preempts, self.cancels, self.completions = z(), z(), z()
+
+    def observe(self, dec: TriggerDecision) -> None:
+        """Accumulate one batched control tick's decisions."""
+
+        off = np.asarray(dec.offload, bool)
+        rep = np.asarray(dec.replayed, bool)
+        pre = np.asarray(dec.preempt, bool)
+        self.ticks += 1
+        self.fires += off
+        self.replays += rep
+        self.preempts += pre
+        if self.record_streams:
+            self.offload_stream.append(off)
+            self.replay_stream.append(rep)
+            self.preempt_stream.append(pre)
+            self.slot_stream.append(np.asarray(dec.slot, np.int32))
+
+    def note_cancel(self, robot_id: int) -> None:
+        self.cancels[robot_id] += 1
+
+    def note_completion(self, robot_id: int) -> None:
+        self.completions[robot_id] += 1
+
+    def streams(self) -> Dict[str, np.ndarray]:
+        """[T, R] decision streams (requires ``record_streams=True``)."""
+
+        if not self.record_streams:
+            raise ValueError("telemetry was not recording streams")
+        return {
+            "offload": np.stack(self.offload_stream),
+            "replayed": np.stack(self.replay_stream),
+            "preempt": np.stack(self.preempt_stream),
+            "slot": np.stack(self.slot_stream),
+        }
+
+    def robot_trace(self, robot_id: int) -> QueueTrace:
+        """One robot's recorded decisions as an engine-scoreable trace."""
+
+        s = self.streams()
+        return QueueTrace(
+            refill_cloud=s["offload"][:, robot_id],
+            refill_local=s["replayed"][:, robot_id],
+            preempt=s["preempt"][:, robot_id],
+            slot=s["slot"][:, robot_id],
+        )
+
+    def offload_fractions(self) -> np.ndarray:
+        """Realized per-robot cloud fraction of chunk refill decisions."""
+
+        refills = self.fires + self.replays
+        return self.fires / np.maximum(refills, 1)
+
+    def fleet_offload_fraction(self) -> float:
+        refills = int((self.fires + self.replays).sum())
+        return float(self.fires.sum()) / max(refills, 1)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "ticks": self.ticks,
+            "fires": self.fires.tolist(),
+            "replays": self.replays.tolist(),
+            "preempts": self.preempts.tolist(),
+            "cancels": self.cancels.tolist(),
+            "completions": self.completions.tolist(),
+            "offload_fractions": [
+                round(float(f), 4) for f in self.offload_fractions()
+            ],
+            "fleet_offload_fraction": round(self.fleet_offload_fraction(), 4),
+        }

@@ -130,6 +130,8 @@ class ContinuousBatchingScheduler:
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0        # rounds where both kinds decoded
+        self.decode_rounds = 0       # rounds where any sequence decoded
+        self.cancelled = 0           # sequences cancelled mid-flight
         self.last_round_kinds: Tuple[int, int] = (0, 0)  # (cloud, split)
 
         # KV page accounting: a request needs prompt + chunk tokens resident
@@ -198,6 +200,39 @@ class ContinuousBatchingScheduler:
         else:
             self._queue.append(req)
 
+    def cancel(self, robot_id: int) -> bool:
+        """Cancel ``robot_id``'s queued or in-flight chunk request.
+
+        The redundancy-aware fleet loop calls this when a contact-phase
+        trigger fires while a previous request is still decoding: the stale
+        sequence's pool pages (and split-lane row, for partitioned robots)
+        are freed mid-flight so the fresh observation can be admitted
+        immediately.  Returns ``False`` when nothing was in flight (e.g.
+        the preemption raced the chunk's final decode step) — the pages
+        were already released by completion, so nothing is double-freed.
+        """
+
+        for lane_queue in filter(None, (
+            self._queue, self._split.queue if self._split else None,
+        )):
+            for req in lane_queue:
+                if req.robot_id == robot_id:
+                    lane_queue.remove(req)
+                    self.cancelled += 1
+                    return True
+        for seq in self._seqs.values():
+            if seq.robot_id == robot_id:
+                self._release(seq)
+                self.cancelled += 1
+                return True
+        if self._split is not None:
+            for seq in self._split.seqs.values():
+                if seq.robot_id == robot_id:
+                    self._split.release(seq)
+                    self.cancelled += 1
+                    return True
+        return False
+
     @property
     def n_pending(self) -> int:
         return len(self._queue) + (len(self._split.queue) if self._split else 0)
@@ -228,6 +263,8 @@ class ContinuousBatchingScheduler:
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0
+        self.decode_rounds = 0
+        self.cancelled = 0
         self.last_round_kinds = (0, 0)
 
     # ------------------------------------------------------------------
@@ -404,6 +441,7 @@ class ContinuousBatchingScheduler:
         )
         self.last_round_kinds = (n_cloud, n_split)
         self.mixed_rounds += n_cloud > 0 and n_split > 0
+        self.decode_rounds += n_cloud > 0 or n_split > 0
         self.peak_active = max(self.peak_active, n_cloud + n_split)
         done: List[ChunkResult] = []
         block = self._block_for_depth(self.n_pending)
@@ -481,14 +519,9 @@ class _SplitLane:
         self.queue: Deque[ChunkRequest] = deque()
         self.seqs: Dict[int, _SplitSeq] = {}
         self._free_rows: List[int] = list(range(rows))
-        spec = PagedSpec(
-            num_pages=sched.allocator.num_pages,
-            page_size=sched.page_size,
-            max_pages_per_seq=sched.pages_per_req,
-        )
-        self.spec = spec
-        self.ex.build_suffix_fns(spec, extra=sched.total_tokens)
-        self._layers = self.ex.init_suffix_pools(spec, rows)
+        # the suffix pools share the scheduler's pool geometry (and pages)
+        self.ex.build_suffix_fns(sched.paged_spec, extra=sched.total_tokens)
+        self._layers = self.ex.init_suffix_pools(sched.paged_spec, rows)
         # host-side row bookkeeping shipped into every suffix call
         self._pt = np.zeros((rows, sched.pages_per_req), np.int32)
         self._len = np.zeros((rows,), np.int32)
@@ -521,6 +554,15 @@ class _SplitLane:
         if not self._free_rows:
             self._grow_rows()
         return self._free_rows.pop(0)
+
+    def release(self, seq: _SplitSeq) -> None:
+        """Return pages + row; zero the row's capacity so in-flight batches
+        can never write into pages a later admission reuses."""
+
+        self.sched.allocator.free(seq.pages)
+        del self.seqs[seq.row]
+        self._free_rows.append(seq.row)
+        self._cap[seq.row] = 0
 
     def reserve(self, req: ChunkRequest) -> _SplitSeq:
         sched = self.sched
@@ -603,10 +645,7 @@ class _SplitLane:
             self._len[[s.row for s in active]] += 1
             for seq in list(active):
                 if seq.remaining == 0:
-                    sched.allocator.free(seq.pages)
-                    del self.seqs[seq.row]
-                    self._free_rows.append(seq.row)
-                    self._cap[seq.row] = 0
+                    self.release(seq)
                     done.append(ChunkResult(
                         robot_id=seq.robot_id,
                         tokens=np.asarray(seq.tokens, np.int64),

@@ -271,3 +271,58 @@ def test_executor_rejects_bad_cuts():
     with pytest.raises(NotImplementedError):
         cfg2, model2, params2 = _f32_stack("seamless-m4t-medium")
         PartitionExecutor(model2, params2, 1)
+
+
+# ---------------------------------------------------------------------------
+# telemetry-driven offload fractions (the closed planner loop)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["openvla-7b", "qwen3-moe-235b-a22b"])
+def test_telemetry_replan_never_worse_than_global_fraction(arch):
+    """A cut planned at the fleet's REALIZED offload fraction is never worse
+    (at that fraction) than re-pricing the global-fraction plan's cut — the
+    planner minimizes over all cuts at whatever fraction it is given."""
+
+    from repro.partition.planner import evaluate_cut
+
+    cfg = get_config(arch)
+    graph = build_graph(cfg)
+    for profile, channel in NETWORK_PROFILES.items():
+        global_plan = plan_partition(cfg, channel=channel, graph=graph)
+        for realized in (0.05, 0.2, 0.6, 0.95):
+            replanned = plan_partition(
+                cfg, channel=channel, graph=graph, offload_fraction=realized
+            )
+            repriced = evaluate_cut(
+                cfg, global_plan.cut, channel=channel, graph=graph,
+                offload_fraction=realized,
+            )
+            assert replanned.total_ms <= repriced.total_ms + 1e-9, (
+                arch, profile, realized
+            )
+            # self-consistency: re-pricing the replanned cut reproduces it
+            again = evaluate_cut(
+                cfg, replanned.cut, channel=channel, graph=graph,
+                offload_fraction=realized,
+            )
+            assert again.total_ms == pytest.approx(replanned.total_ms)
+
+
+def test_evaluate_cut_validates_range():
+    from repro.partition.planner import evaluate_cut
+
+    cfg = get_config("openvla-7b")
+    with pytest.raises(ValueError):
+        evaluate_cut(cfg, 10_000)
+
+
+def test_replan_from_telemetry_compares_plans():
+    from repro.launch.serve import replan_from_telemetry
+
+    plan, global_plan, repriced = replan_from_telemetry(
+        "openvla-7b", 0.12, network="lan", verbose=False
+    )
+    assert plan.offload_fraction in (0.12, 0.0, 1.0)  # forced at boundary cuts
+    assert plan.total_ms <= repriced.total_ms + 1e-9
+    assert repriced.cut == global_plan.cut

@@ -1,0 +1,258 @@
+"""Decision-core tests: closed-loop trigger policy, queue replay, telemetry.
+
+The acceptance property pinned here: the live ``serve_fleet`` loop and the
+offline decision core produce IDENTICAL dispatch decisions on a matched
+trigger stream (same fires, same replays, same executed slots) — the
+simulator and the serving runtime share one ``trigger_step``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kinematics import KinematicFrame
+from repro.core.trigger import TriggerConfig, run_trigger
+from repro.runtime.policy import (
+    FleetTelemetry,
+    PolicyConfig,
+    QueueTrace,
+    TriggerDecision,
+    queue_replay,
+    rollout,
+    trigger_init,
+    trigger_step,
+)
+
+
+def _smooth_frames(t_len=300, n=7, seed=0, batch=None, spike_at=None):
+    rng = np.random.default_rng(seed)
+    qd = np.ones((t_len, n), np.float32) * 0.3 + rng.normal(0, 1e-4, (t_len, n))
+    tau = rng.normal(0, 0.02, (t_len, n)).astype(np.float32)
+    if spike_at is not None:
+        # sustained contact: alternating torque bursts keep the variation
+        # monitor (which reads Δτ, not τ) firing past the onset
+        sign = np.where(np.arange(t_len - spike_at) % 2 == 0, 6.0, -6.0)
+        tau[spike_at:] += sign[:, None].astype(np.float32)
+    q = np.cumsum(qd, 0) * 0.002
+    if batch is not None:
+        q, qd, tau = (np.repeat(a[:, None], batch, 1) for a in (q, qd, tau))
+    return KinematicFrame(jnp.asarray(q), jnp.asarray(qd), jnp.asarray(tau))
+
+
+# ---------------------------------------------------------------------------
+# queue replay (the offline engine's decision substrate)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_replay_cloud_forces_every_depletion():
+    k = 4
+    trace = queue_replay(np.zeros(16, bool), k, on_empty="cloud")
+    assert trace.refill_cloud[::k].all() and trace.refill_cloud.sum() == 4
+    assert not trace.refill_local.any()
+    np.testing.assert_array_equal(trace.slot, np.arange(16) % k)
+
+
+def test_queue_replay_local_modes_absorb_depletions():
+    k = 4
+    for mode in ("edge", "reuse"):
+        trace = queue_replay(np.zeros(16, bool), k, on_empty=mode)
+        if mode == "reuse":
+            # bootstrap: the first-ever depletion has nothing to replay
+            assert trace.refill_cloud[0] and trace.refill_cloud.sum() == 1
+            assert trace.refill_local[k::k].all()
+        else:
+            assert not trace.refill_cloud.any()
+            assert trace.refill_local[::k].all()
+
+
+def test_queue_replay_preempt_only_mid_chunk():
+    k = 4
+    dispatch = np.zeros(12, bool)
+    dispatch[[0, 2, 4]] = True  # 0: empty queue (no preempt); 2, 4: mid-chunk
+    trace = queue_replay(dispatch, k, on_empty="edge")
+    np.testing.assert_array_equal(
+        trace.preempt, [False, False, True, False, True] + [False] * 7
+    )
+
+
+def test_bad_on_empty_rejected():
+    with pytest.raises(ValueError):
+        PolicyConfig(on_empty="never")
+
+
+# ---------------------------------------------------------------------------
+# streaming decision core
+# ---------------------------------------------------------------------------
+
+
+def test_reuse_mode_replays_and_never_resubmits_when_smooth():
+    """Redundant motion: one bootstrap fetch, then pure cache replay."""
+
+    cfg = PolicyConfig(trigger=TriggerConfig(), chunk_len=8, on_empty="reuse")
+    _, dec = rollout(cfg, _smooth_frames(200, batch=2))
+    off = np.asarray(dec.offload)
+    rep = np.asarray(dec.replayed)
+    assert off[0].all() and off.sum() == 2, "exactly one bootstrap per robot"
+    assert rep.sum() == 2 * (200 // 8 - 1), "depletions replay the cache"
+    np.testing.assert_array_equal(np.asarray(dec.slot)[:, 0], np.arange(200) % 8)
+
+
+def test_reuse_mode_offloads_match_pure_trigger_after_bootstrap():
+    """Post-bootstrap reuse-mode offloads are exactly the kinematic fires."""
+
+    tcfg = TriggerConfig(cooldown_steps=7)
+    cfg = PolicyConfig(trigger=tcfg, chunk_len=8, on_empty="reuse")
+    frames = _smooth_frames(400, spike_at=150, batch=1)
+    _, dec = rollout(cfg, frames)
+    _, ref = run_trigger(tcfg, frames)
+    got = np.asarray(dec.offload[:, 0])
+    want = np.asarray(ref.dispatch[:, 0])
+    # the bootstrap at t=0 resets the cooldown but both streams are quiet
+    # until warmup, so they agree everywhere except the forced first fetch
+    assert got[0] and not want[0]
+    np.testing.assert_array_equal(got[1:], want[1:])
+    assert got[150:].sum() > 0, "contact must fire"
+
+
+def test_cooldown_refire_exactly_at_expiry():
+    """Under a sustained trigger the dispatch period is exactly C+1: the
+    cooldown is set to C at the dispatch tick, decays to 0 over the next C
+    steps, and the trigger re-arms on the following tick (Eq. 8)."""
+
+    for cd in (4, 7, 10):
+        tcfg = TriggerConfig(cooldown_steps=cd)
+        frames = _smooth_frames(260, spike_at=150)
+        _, out = run_trigger(tcfg, frames)
+        disp = np.flatnonzero(np.asarray(out.dispatch))
+        sustained = disp[(disp >= 150) & (disp < 220)]
+        assert len(sustained) >= 3, "sustained contact must keep firing"
+        np.testing.assert_array_equal(np.diff(sustained), cd + 1)
+
+
+def test_fleet_state_vmaps_and_is_fixed_shape():
+    cfg = PolicyConfig(chunk_len=8, on_empty="reuse")
+    state = trigger_init(cfg, (5,))
+    assert state.head.shape == (5,) and state.primed.shape == (5,)
+    frames = _smooth_frames(4, batch=5)
+    f0 = KinematicFrame(frames.q[0], frames.qd[0], frames.tau[0])
+    state2, dec = jax.jit(lambda s, f: trigger_step(s, f, cfg))(state, f0)
+    assert dec.offload.shape == (5,)
+    assert jax.tree.all(
+        jax.tree.map(lambda a, b: a.shape == b.shape, state, state2)
+    ), "decision state must keep fixed shapes across ticks"
+
+
+# ---------------------------------------------------------------------------
+# offline engine decisions == live fleet decisions (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("trigger", ["rapid", "always"])
+def test_serve_fleet_matches_offline_decision_core(trigger):
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import EpisodeTokenizer
+    from repro.launch.serve import serve_fleet
+    from repro.models.model import Model
+    from repro.robotics.episodes import generate_episode
+
+    cfg = get_smoke_config("openvla-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = EpisodeTokenizer(cfg.vocab_size)
+    n_robots, max_steps, seed = 2, 300, 0
+
+    out = serve_fleet(
+        model, params, tok, n_robots=n_robots, max_steps=max_steps,
+        max_slots=2, seed=seed, trigger=trigger, record_streams=True,
+        verbose=False,
+    )
+    streams = out["telemetry"].streams()
+
+    # rebuild the SAME kinematic stream serve_fleet served and run the
+    # offline decision core over it
+    tasks = ["pick_place", "drawer_open", "peg_insertion"]
+    eps = [
+        generate_episode(tasks[i % len(tasks)], seed=seed + i)
+        for i in range(n_robots)
+    ]
+    t_len = out["steps"]
+    frames = KinematicFrame(
+        q=jnp.asarray(np.stack([ep.q[:t_len] for ep in eps], 1)),
+        qd=jnp.asarray(np.stack([ep.qd[:t_len] for ep in eps], 1)),
+        tau=jnp.asarray(np.stack([ep.tau[:t_len] for ep in eps], 1)),
+    )
+    pcfg = PolicyConfig(
+        trigger=TriggerConfig(cooldown_steps=7 if trigger == "rapid" else 8),
+        chunk_len=8,
+        on_empty="reuse" if trigger == "rapid" else "cloud",
+    )
+    _, dec = jax.jit(lambda f: rollout(pcfg, f))(frames)
+
+    np.testing.assert_array_equal(
+        streams["offload"], np.asarray(dec.offload), "fires must match"
+    )
+    np.testing.assert_array_equal(
+        streams["replayed"], np.asarray(dec.replayed), "replays must match"
+    )
+    np.testing.assert_array_equal(
+        streams["slot"], np.asarray(dec.slot), "executed slots must match"
+    )
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+def _decision(off, rep, pre=None, slot=None):
+    off = jnp.asarray(off)
+    return TriggerDecision(
+        offload=off,
+        replayed=jnp.asarray(rep),
+        preempt=jnp.zeros_like(off) if pre is None else jnp.asarray(pre),
+        slot=jnp.zeros(off.shape, jnp.int32) if slot is None else jnp.asarray(slot),
+        trig=None,
+    )
+
+
+def test_telemetry_offload_fractions():
+    tel = FleetTelemetry(2, record_streams=True)
+    tel.observe(_decision([True, False], [False, True]))
+    tel.observe(_decision([True, False], [False, True]))
+    tel.observe(_decision([False, True], [True, False]))
+    np.testing.assert_allclose(tel.offload_fractions(), [2 / 3, 1 / 3])
+    assert tel.fleet_offload_fraction() == pytest.approx(0.5)
+    s = tel.streams()
+    assert s["offload"].shape == (3, 2)
+    tr = tel.robot_trace(1)
+    assert isinstance(tr, QueueTrace)
+    np.testing.assert_array_equal(tr.refill_cloud, [False, False, True])
+
+
+def test_telemetry_requires_recording_for_streams():
+    tel = FleetTelemetry(1)
+    tel.observe(_decision([True], [False]))
+    with pytest.raises(ValueError):
+        tel.streams()
+
+
+def test_score_trace_reuse_redundant_replay_stays_accurate():
+    """Cache replay in a redundant phase re-anchors the plan (no error);
+    the same replay during contact keeps the stale plan and accrues error."""
+
+    from repro.robotics.episodes import generate_episode
+    from repro.runtime.engine import EngineConfig, score_trace
+
+    ep = generate_episode("pick_place", seed=0)
+    t_len = 200  # the first move phase: fully redundant
+    ep = ep._replace(
+        q=ep.q[:t_len], qd=ep.qd[:t_len], tau=ep.tau[:t_len],
+        tau_ext=ep.tau_ext[:t_len], critical=ep.critical[:t_len],
+        ref_actions=ep.ref_actions[:t_len], phase_id=ep.phase_id[:t_len],
+    )
+    assert not ep.critical.any()
+    trace = queue_replay(np.zeros(t_len, bool), 8, on_empty="reuse")
+    res = score_trace(ep, trace, EngineConfig(), local_src="reuse")
+    assert res.accuracy > 0.95, "redundant replay must track the reference"
+    assert res.counters.n_offloads == 1  # the bootstrap fetch only

@@ -344,6 +344,191 @@ def test_serve_fleet_mixed_end_to_end(stack):
 
 
 # ---------------------------------------------------------------------------
+# mid-flight cancellation (contact-phase preemption support)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_frees_pages_mid_flight(stack):
+    """Cancelling an in-flight sequence releases its pages and row; the
+    survivor still decodes its exact isolated-path chunk."""
+
+    _, model, params, tok = stack
+    policy = CloudPolicy(model, params, tok)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=4)
+    rng = np.random.default_rng(31)
+    reqs = [(r, *_obs(rng)) for r in range(2)]
+    for r, qd, tau in reqs:
+        sched.submit(r, qd, tau)
+    sched.step()  # both admitted, mid-decode
+    assert sched.cancel(0)
+    assert sched.allocator.num_in_use == sched.pages_per_req, "pages not freed"
+    results = {res.robot_id: res for res in sched.drain()}
+    assert set(results) == {1}, "cancelled sequence must not complete"
+    want = policy(reqs[1][1], reqs[1][2])[0]
+    got = tok.decode_action(results[1].tokens).reshape(8, 7)
+    np.testing.assert_array_equal(want, got)
+    assert sched.pool_stats().pages_in_use == 0
+    assert sched.cancelled == 1
+
+
+def test_cancel_queued_request_before_admission(stack):
+    _, model, params, tok = stack
+    pages_per_req = -(-(14 + 56) // 16)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=4, num_pages=pages_per_req
+    )
+    rng = np.random.default_rng(32)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng))
+    sched.step()  # only robot 0 fits; robot 1 still queued
+    assert sched.n_pending == 1
+    assert sched.cancel(1)
+    assert sched.n_pending == 0
+    results = sched.drain()
+    assert {res.robot_id for res in results} == {0}
+    assert sched.pool_stats().pages_in_use == 0
+
+
+def test_cancel_racing_final_decode_step_no_double_free(stack):
+    """A preemption arriving on the chunk's last step: cancelling right
+    before the finishing round frees once; cancelling right after the chunk
+    completed is a no-op — never a double free."""
+
+    _, model, params, tok = stack
+    rng = np.random.default_rng(33)
+
+    # cancel right BEFORE the finishing round (one token remaining)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=2)
+    sched.submit(0, *_obs(rng))
+    sched.step()  # admit + first decode block
+    while next(iter(sched._seqs.values())).remaining > sched.decode_block:
+        sched.step()
+    assert sched.n_active == 1, "one block from completion"
+    assert sched.cancel(0)
+    assert sched.drain() == []
+    assert sched.pool_stats().pages_in_use == 0
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+    # cancel right AFTER completion: nothing in flight, nothing double-freed
+    sched.submit(0, *_obs(rng))
+    results = sched.drain()
+    assert len(results) == 1
+    assert not sched.cancel(0), "completed sequence must not cancel"
+    assert sched.pool_stats().pages_in_use == 0
+    # the pool stays consistent: a fresh request is served fine
+    sched.submit(0, *_obs(rng))
+    assert len(sched.drain()) == 1
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_cancel_split_lane_frees_shared_pool(f32_stack):
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = f32_stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=4)
+    sched.attach_partition(ex)
+    rng = np.random.default_rng(34)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng), partitioned=True)
+    sched.step()
+    assert sched.allocator.num_in_use == 2 * sched.pages_per_req
+    assert sched.cancel(1), "split-lane sequence must be cancellable"
+    assert sched.allocator.num_in_use == sched.pages_per_req
+    results = {res.robot_id for res in sched.drain()}
+    assert results == {0}
+    assert sched.pool_stats().pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# closed-loop redundancy-aware fleet serving
+# ---------------------------------------------------------------------------
+
+
+def test_serve_fleet_rapid_replays_and_cancels(stack):
+    """The rapid fleet replays cached chunks on redundant depletions, only
+    fires offload, cancels stale in-flight work — and leaks no pages."""
+
+    _, model, params, tok = stack
+    out = serve_fleet(
+        model, params, tok, n_robots=2, max_steps=300, max_slots=2,
+        trigger="rapid", verbose=False,
+    )
+    tel = out["telemetry"]
+    assert tel.replays.sum() > 0, "redundant depletions must replay the cache"
+    assert tel.fires.sum() > 0, "contact phases must offload"
+    assert 0.0 < out["offload_fraction"] < 1.0
+    # replays never touched the scheduler: requests == fires - suppressed
+    assert int(out["offloads"].sum()) == int(tel.fires.sum())
+    # every page still held belongs to a request in flight at episode end —
+    # cancels and completions freed everything else (no leaks)
+    pages_per_req = -(-(14 + 56) // 16)
+    in_flight = int(tel.fires.sum() - tel.completions.sum() - tel.cancels.sum())
+    assert out["pool"].pages_in_use == in_flight * pages_per_req
+    assert out["decode_rounds"] <= out["steps"]
+
+
+def test_serve_fleet_rapid_cancels_in_flight_on_hot_trigger(stack):
+    """With a cooldown shorter than the chunk service time, contact-phase
+    fires land while the previous request is still decoding — the loop must
+    cancel the stale sequence (pages freed, exactly one in flight per
+    robot) and resubmit the fresh observation."""
+
+    from repro.core.trigger import TriggerConfig
+
+    _, model, params, tok = stack
+    out = serve_fleet(
+        model, params, tok, n_robots=2, max_steps=300, max_slots=2,
+        trigger="rapid", trigger_cfg=TriggerConfig(cooldown_steps=3),
+        verbose=False,
+    )
+    tel = out["telemetry"]
+    assert tel.cancels.sum() > 0, "hot trigger must cancel in-flight work"
+    assert out["cancelled"] == int(tel.cancels.sum())
+    # accounting stays exact through cancel/resubmit churn: whatever is
+    # still resident at episode end is exactly the uncancelled in-flight set
+    pages_per_req = -(-(14 + 56) // 16)
+    in_flight = int(tel.fires.sum() - tel.completions.sum() - tel.cancels.sum())
+    assert out["pool"].pages_in_use == in_flight * pages_per_req
+
+
+def test_serve_fleet_rapid_fewer_decode_rounds_than_always(stack):
+    _, model, params, tok = stack
+    kw = dict(n_robots=2, max_steps=300, max_slots=2, verbose=False)
+    always = serve_fleet(model, params, tok, trigger="always", **kw)
+    rapid = serve_fleet(model, params, tok, trigger="rapid", **kw)
+    assert rapid["decode_rounds"] < always["decode_rounds"]
+    assert rapid["offloads"].sum() < always["offloads"].sum()
+    assert always["offload_fraction"] == 1.0
+
+
+def test_serve_fleet_rejects_unknown_trigger(stack):
+    _, model, params, tok = stack
+    with pytest.raises(ValueError):
+        serve_fleet(model, params, tok, n_robots=1, trigger="sometimes")
+
+
+def test_fleet_offload_jitter_keyed_per_robot(stack):
+    """Offload latency draws are keyed by (robot, ordinal): reproducible
+    across runs and independent of cross-robot completion order."""
+
+    import jax as _jax
+
+    from repro.runtime.channel import ChannelConfig, sample_latency_ms
+
+    _, model, params, tok = stack
+    kw = dict(n_robots=2, max_steps=60, max_slots=2, seed=3, verbose=False)
+    a = serve_fleet(model, params, tok, **kw)
+    b = serve_fleet(model, params, tok, **kw)
+    assert a["offload_ms_by_robot"] == b["offload_ms_by_robot"]
+    assert any(a["offload_ms_by_robot"]), "fleet must have offloaded"
+    # the first draw for robot 0 is exactly the (robot, ordinal)-keyed sample
+    key = _jax.random.fold_in(_jax.random.fold_in(_jax.random.PRNGKey(3 + 7919), 0), 0)
+    want = sample_latency_ms(ChannelConfig(), 8, key)
+    assert a["offload_ms_by_robot"][0][0] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
 # adaptive decode blocks
 # ---------------------------------------------------------------------------
 
