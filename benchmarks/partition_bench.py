@@ -11,6 +11,13 @@ Emits the ``name,us_per_call,derived`` CSV contract and writes
 ``BENCH_partition.json``; ``derived`` is the number of cells where a
 genuine SPLIT (layers on both sides) is optimal.
 
+Each (arch, profile) additionally gets a HETEROGENEOUS row: a 6-robot
+fleet whose realized offload fractions spread around the trigger-sim base
+is assigned per-robot cuts (``assign_cuts``, per-cut staleness pricing,
+k_max 3) and compared against the best single global cut at the same
+telemetry — the assignment is never worse by construction, and the row
+records how much the frontier saves.
+
     PYTHONPATH=src python benchmarks/partition_bench.py
 """
 
@@ -19,6 +26,11 @@ from __future__ import annotations
 import json
 import os
 import time
+
+# deterministic per-robot spread for the heterogeneous fleet row: scaled
+# multiples of the measured base fraction, spanning an always-offload robot
+# down to a near-fully-redundant one (clipped into [0.02, 1])
+HETERO_FLEET_SPREAD = (3.0, 2.0, 1.0, 0.5, 0.2, 0.065)
 
 
 def _offload_fraction() -> float:
@@ -37,18 +49,25 @@ def _offload_fraction() -> float:
 def bench_rows(offload_fraction=None, out_path=None):
     from repro.configs import ARCH_IDS, get_config
     from repro.partition.graph import build_graph
-    from repro.partition.planner import NETWORK_PROFILES, plan_partition
+    from repro.partition.planner import (
+        NETWORK_PROFILES, assign_cuts, plan_partition,
+    )
 
     if offload_fraction is None:
         offload_fraction = _offload_fraction()
+    fleet = [
+        min(max(offload_fraction * s, 0.02), 1.0) for s in HETERO_FLEET_SPREAD
+    ]
 
     out = {"offload_fraction": round(offload_fraction, 4)}
     rows = []
     n_split = 0
+    n_hetero = 0
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         graph = build_graph(cfg)
         cells = []
+        hetero_cells = []
         for profile, channel in NETWORK_PROFILES.items():
             plan = plan_partition(
                 cfg, channel=channel,
@@ -81,12 +100,36 @@ def bench_rows(offload_fraction=None, out_path=None):
                 ),
             }
             cells.append(f"{profile}:{plan.mode}@{plan.total_ms:.0f}ms")
+
+            # heterogeneous fleet row: per-robot cuts vs the best single
+            # global cut at the same (spread) telemetry
+            a = assign_cuts(
+                fleet, k_max=3, cfg=cfg, graph=graph, channel=channel,
+            )
+            n_hetero += len(a.frontier) >= 2
+            out[f"hetero|{arch}|{profile}"] = {
+                "fractions": [round(f, 4) for f in a.fractions],
+                "cuts": list(a.cuts),
+                "cut_layers": list(a.cut_layers),
+                "frontier": list(a.frontier),
+                "fleet_total_ms": round(a.total_ms, 2),
+                "best_single_cut": a.best_single_cut,
+                "best_single_ms": round(a.best_single_ms, 2),
+                "saved_ms": round(a.best_single_ms - a.total_ms, 2),
+            }
+            hetero_cells.append(
+                f"{profile}:{len(a.frontier)}cuts"
+                f"{'+' if len(a.frontier) >= 2 else '='}"
+                f"{a.best_single_ms - a.total_ms:.0f}ms"
+            )
         rows.append(f"{arch}: " + " ".join(cells))
+        rows.append(f"{arch} [hetero fleet]: " + " ".join(hetero_cells))
 
     if out_path is None:
         out_path = os.path.abspath(
             os.path.join(os.path.dirname(__file__), "..", "BENCH_partition.json")
         )
+    out["hetero_frontier_cells"] = n_hetero
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     return rows, n_split

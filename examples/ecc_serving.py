@@ -21,10 +21,17 @@ Combined with ``--fleet N`` it serves a MIXED fleet: every second robot goes
 through the split, and their cloud suffixes share decode rounds (and KV
 pages) with the cloud-only robots.
 
+With ``--assign-cuts`` the loop closes HETEROGENEOUSLY: episode 1 gathers
+each robot's realized offload fraction, ``assign_cuts`` maps every robot to
+its own cut from a small frontier (high-redundancy robots get deeper edge
+prefixes), and episode 2 serves the fleet with per-robot cuts — several
+distinct cuts decode in the same scheduler rounds against one KV page pool.
+
     PYTHONPATH=src python examples/ecc_serving.py --task drawer_open
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4
     PYTHONPATH=src python examples/ecc_serving.py --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --partition auto --network lan
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 6 --trigger rapid --assign-cuts
 """
 
 import argparse
@@ -55,6 +62,16 @@ def main(argv=None):
     p.add_argument("--trigger", default="always", choices=["always", "rapid"],
                    help="fleet dispatch policy: always-offload or the "
                         "closed-loop redundancy-aware RAPID trigger")
+    p.add_argument("--assign-cuts", action="store_true",
+                   help="re-assign per-robot cuts from episode 1's realized "
+                        "offload fractions and serve episode 2 with a "
+                        "heterogeneous cut frontier")
+    p.add_argument("--k-max", type=int, default=3,
+                   help="max distinct concurrently-active cuts")
+    p.add_argument("--defer-hot", type=float, default=None,
+                   help="cancellation-aware admission: preempt-rate "
+                        "threshold above which a preempting robot's "
+                        "admission is held one round")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -80,8 +97,29 @@ def main(argv=None):
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             channel=NETWORK_PROFILES[args.network],
             partition_executor=executor, split_robots=split,
-            trigger=args.trigger,
+            trigger=args.trigger, defer_hot_admission=args.defer_hot,
         )
+        if args.assign_cuts:
+            # close the loop heterogeneously: per-robot cuts from episode
+            # 1's realized fractions, served in episode 2 on a cut frontier
+            from repro.launch.serve import assign_fleet_cuts
+
+            executor2, robot_cuts, assignment = assign_fleet_cuts(
+                model, params, args.arch, out["telemetry"], args.network,
+                k_max=args.k_max,
+            )
+            if robot_cuts:
+                out = serve_fleet(
+                    model, params, tok, n_robots=args.fleet,
+                    max_steps=args.steps,
+                    channel=NETWORK_PROFILES[args.network],
+                    partition_executor=executor2, robot_cuts=robot_cuts,
+                    trigger=args.trigger,
+                    defer_hot_admission=args.defer_hot,
+                )
+                print(f"episode 2 robot cuts: {out['robot_cuts']} "
+                      f"({len(out['active_cuts'])} distinct; "
+                      f"{out['hetero_rounds']} hetero decode rounds)")
         served = len(out["service_rounds"])
         pool = out["pool"]
         tel = out["telemetry"]
@@ -94,8 +132,10 @@ def main(argv=None):
                   f"replays, {int(tel.cancels.sum())} in-flight cancels, "
                   f"realized f_off={tel.fleet_offload_fraction():.2f} "
                   f"(per-robot {[round(float(f), 2) for f in tel.offload_fractions()]})")
-        if split:
+        if split or out["split_robots"]:
             print(f"rounds with both kinds decoding: {out['mixed_rounds']}")
+        if out["deferred"]:
+            print(f"cancellation-aware admission: {out['deferred']} deferred")
         print(f"mean offload net: {np.mean(out['offload_ms']):.1f} ms (jittered)"
               if out["offload_ms"] else "no offloads")
         print(f"actions executed: {out['actions'].shape}")

@@ -214,6 +214,8 @@ def serve_fleet(
     channel: Optional[ChannelConfig] = None,
     partition_executor=None,
     split_robots: Optional[List[int]] = None,
+    robot_cuts: Optional[Dict[int, int]] = None,
+    defer_hot_admission: Optional[float] = None,
     num_pages: Optional[int] = None,
     trigger: str = "always",
     trigger_cfg: Optional[TriggerConfig] = None,
@@ -244,6 +246,20 @@ def serve_fleet(
     through the edge-cloud split: their edge prefix runs per robot and the
     cloud suffix joins the same paged decode rounds (and the same KV page
     pool) as the cloud-only robots.
+
+    ``robot_cuts`` generalizes ``split_robots`` to a HETEROGENEOUS fleet:
+    a ``{robot_id: cut_layer}`` map (e.g. from ``assign_fleet_cuts``) serves
+    each listed robot through its own cut — one scheduler lane per distinct
+    cut, sliced from ``partition_executor`` via ``with_cut`` — while robots
+    absent from the map stay cloud-only.  All cuts still share decode
+    rounds and the single page allocator.
+
+    ``defer_hot_admission`` (a preempt-rate threshold, e.g. ``0.2``) turns
+    on cancellation-aware admission: when a robot fires a mid-chunk preempt
+    and its realized preempt rate runs above the threshold, the resubmitted
+    request's ADMISSION (not its FIFO slot) is held back one round — if the
+    trigger fires again immediately, the cancel removes a queued request
+    instead of throwing away a paid batched prefill.
 
     The returned ``telemetry`` (``FleetTelemetry``) carries per-robot
     realized offload fractions — feed them back into
@@ -285,11 +301,19 @@ def serve_fleet(
         max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
         num_pages=num_pages,
     )
-    split_set = set(split_robots or [])
-    if partition_executor is not None and split_set:
-        sched.attach_partition(partition_executor)
+    if robot_cuts is None:
+        robot_cuts = (
+            {r: partition_executor.cut_layer for r in (split_robots or [])}
+            if partition_executor is not None else {}
+        )
     else:
-        split_set = set()
+        robot_cuts = dict(robot_cuts)
+    if partition_executor is not None and robot_cuts:
+        for c in sorted(set(robot_cuts.values())):
+            sched.attach_partition(partition_executor.with_cut(c))
+    else:
+        robot_cuts = {}
+    split_set = set(robot_cuts)
 
     cached = np.zeros((n_robots, chunk_len, n_joints), np.float32)
     actions = np.zeros((t_len, n_robots, n_joints), np.float32)
@@ -318,6 +342,7 @@ def serve_fleet(
         # round t is first executable at t+1, exactly as the dispatcher did
         actions[t] = cached[rows, np.asarray(dec.slot)]
         trig = np.asarray(dec.offload)
+        pre = np.asarray(dec.preempt)
         for r in np.flatnonzero(trig):
             r = int(r)
             if r in in_flight:
@@ -328,9 +353,21 @@ def serve_fleet(
                 if sched.cancel(r):
                     telemetry.note_cancel(r)
                 in_flight.discard(r)
+            # cancellation-aware admission: a preempting robot whose trigger
+            # is running hot gets its admission (not its queue slot) held
+            # one round, so an immediate re-fire cancels a queued request
+            # instead of a paid batched prefill
+            defer = int(
+                defer_hot_admission is not None
+                and bool(pre[r])
+                and telemetry.preempts[r] / max(int(telemetry.fires[r]), 1)
+                >= defer_hot_admission
+            )
             sched.submit(
                 r, eps[r].qd[t][None], eps[r].tau[t][None],
                 partitioned=r in split_set,
+                cut=robot_cuts.get(r),
+                defer_rounds=defer,
             )
             in_flight.add(r)
             n_off[r] += 1
@@ -363,6 +400,12 @@ def serve_fleet(
             f"kv_pages={pool.pages_in_use}/{pool.pages_in_use + pool.pages_free} "
             f"(high-water {pool.high_water}) "
             + (f"mixed_rounds={sched.mixed_rounds} " if split_set else "")
+            + (
+                f"cuts={sorted(set(robot_cuts.values()))} "
+                f"hetero_rounds={sched.hetero_rounds} "
+                if len(set(robot_cuts.values())) > 1 else ""
+            )
+            + (f"deferred={sched.deferred} " if sched.deferred else "")
             + f"net_ms={np.mean(offload_ms) if offload_ms else 0:.1f}"
             f"±{np.std(offload_ms) if offload_ms else 0:.1f}"
         )
@@ -376,9 +419,13 @@ def serve_fleet(
         "peak_batch": sched.peak_active,
         "pool": pool,
         "mixed_rounds": sched.mixed_rounds,
+        "hetero_rounds": sched.hetero_rounds,
         "decode_rounds": sched.decode_rounds,
         "cancelled": sched.cancelled,
+        "deferred": sched.deferred,
         "split_robots": sorted(split_set),
+        "robot_cuts": dict(sorted(robot_cuts.items())),
+        "active_cuts": sorted(set(robot_cuts.values())),
         "trigger": trigger,
         "telemetry": telemetry,
         "offload_fraction": telemetry.fleet_offload_fraction(),
@@ -421,6 +468,81 @@ def plan_fleet_partition(model: Model, params, arch: str,
     if verbose:
         print(f"split execution: {cut}/{cfg.num_layers} layers on the edge")
     return PartitionExecutor(model, params, cut, channel=channel), plan
+
+
+def assign_fleet_cuts(model: Model, params, arch: str, telemetry,
+                      network: str = "wan", k_max: int = 3,
+                      verbose: bool = True):
+    """Per-robot cut assignment from realized telemetry, mapped onto ``model``.
+
+    Plans the heterogeneous frontier for the FULL ``arch`` config at each
+    robot's realized offload fraction (``partition.assign_cuts`` — monotone:
+    higher-redundancy robots never get shallower edge prefixes), then maps
+    the assigned full-arch edge layer counts onto this — possibly
+    smoke-scale — model by layer fraction, keeping distinct full cuts
+    distinct on the smaller stack where it has enough layers.
+
+    Returns ``(executor_or_None, robot_cuts, assignment)``: a base
+    ``PartitionExecutor`` (``serve_fleet`` derives per-cut siblings via
+    ``with_cut``), a ``{robot_id: cut_layer}`` map covering the robots that
+    keep an edge prefix, and the full-arch ``CutAssignment``.  Robots the
+    planner sends cloud-only are absent from the map.
+    """
+
+    from repro.partition.executor import PartitionExecutor
+    from repro.partition.planner import NETWORK_PROFILES, assign_cuts
+
+    from repro.partition.graph import build_graph
+
+    channel = NETWORK_PROFILES[network]
+    full_cfg = get_config(arch)
+    graph = build_graph(full_cfg)
+    # the split executor cannot run a pure edge-only deployment (the LM
+    # head always lives cloud-side), so cap the assignment at the deepest
+    # EXECUTABLE cut — fully-redundant robots get every layer on the edge
+    # but keep the head ping-pong priced honestly
+    assignment = assign_cuts(
+        telemetry, k_max=k_max, cfg=full_cfg, graph=graph, channel=channel,
+        max_cut=len(graph.nodes) - 1,
+    )
+    if verbose:
+        print(f"cut assignment [{network}]:", assignment.summary())
+    if model.cfg.encoder_decoder:
+        if verbose:
+            print("encoder-decoder split execution not supported: "
+                  "serving unpartitioned")
+        return None, {}, assignment
+    # map full-arch edge layer counts onto this model's stack; nudge apart
+    # full cuts that would collapse onto the same (smoke) layer so the fleet
+    # stays genuinely heterogeneous whenever the stack has room
+    n_layers = model.cfg.num_layers
+    full_layers = max(full_cfg.num_layers, 1)
+    smoke_of: Dict[int, int] = {}
+    prev = -1
+    for cl in sorted({c for c in assignment.cut_layers if c >= 0}):
+        s = min(max(int(round(cl / full_layers * n_layers)), prev + 1), n_layers)
+        smoke_of[cl] = s
+        prev = s
+    robot_cuts = {
+        r: smoke_of[cl]
+        for r, cl in enumerate(assignment.cut_layers) if cl >= 0
+    }
+    if not robot_cuts:
+        if verbose:
+            print("assignment is all-cloud: serving unpartitioned")
+        return None, {}, assignment
+    base_cut = min(set(robot_cuts.values()))
+    executor = PartitionExecutor(model, params, base_cut, channel=channel)
+    if verbose:
+        lanes = {c: sum(1 for v in robot_cuts.values() if v == c)
+                 for c in sorted(set(robot_cuts.values()))}
+        lane_str = " ".join(
+            f"{n}x{c}-layer-edge" for c, n in lanes.items()
+        )
+        print(f"heterogeneous fleet: {lane_str} "
+              f"(of {n_layers} layers; "
+              f"{len(assignment.cuts) - len(robot_cuts)} cloud-only)")
+    return executor, robot_cuts, assignment
 
 
 def replan_from_telemetry(arch: str, telemetry, network: str = "wan",
@@ -521,6 +643,17 @@ def main(argv=None):
     p.add_argument("--trigger", default="always", choices=["always", "rapid"],
                    help="fleet dispatch policy: always-offload or the "
                         "closed-loop redundancy-aware RAPID trigger")
+    p.add_argument("--assign-cuts", action="store_true",
+                   help="two-episode closed loop: episode 1 gathers realized "
+                        "per-robot offload fractions, then each robot is "
+                        "re-assigned its own cut and episode 2 serves the "
+                        "heterogeneous fleet")
+    p.add_argument("--k-max", type=int, default=3,
+                   help="max distinct concurrently-active cuts")
+    p.add_argument("--defer-hot", type=float, default=None,
+                   help="cancellation-aware admission: preempt-rate "
+                        "threshold above which a preempting robot's "
+                        "admission is held one round")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -541,9 +674,23 @@ def main(argv=None):
         out = serve_fleet(
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
-            trigger=args.trigger,
+            trigger=args.trigger, defer_hot_admission=args.defer_hot,
         )
-        if args.trigger == "rapid" and args.partition != "none":
+        if args.assign_cuts:
+            # close the loop: re-assign per-robot cuts from episode 1's
+            # realized fractions and serve the next episode heterogeneously
+            executor2, robot_cuts, _ = assign_fleet_cuts(
+                model, params, args.arch, out["telemetry"], args.network,
+                k_max=args.k_max,
+            )
+            if robot_cuts:
+                out = serve_fleet(
+                    model, params, tok, n_robots=args.fleet,
+                    max_steps=args.steps, partition_executor=executor2,
+                    robot_cuts=robot_cuts, trigger=args.trigger,
+                    defer_hot_admission=args.defer_hot,
+                )
+        elif args.trigger == "rapid" and args.partition != "none":
             replan_from_telemetry(args.arch, out["telemetry"], args.network)
         return out
     policy, _ = build_policy(

@@ -15,8 +15,10 @@ Three layers:
 from repro.partition.graph import BlockNode, InferenceGraph, build_graph
 from repro.partition.planner import (
     NETWORK_PROFILES,
+    CutAssignment,
     CutEval,
     PartitionPlan,
+    assign_cuts,
     enumerate_cuts,
     plan_partition,
 )
@@ -27,8 +29,10 @@ __all__ = [
     "InferenceGraph",
     "build_graph",
     "NETWORK_PROFILES",
+    "CutAssignment",
     "CutEval",
     "PartitionPlan",
+    "assign_cuts",
     "enumerate_cuts",
     "plan_partition",
     "PartitionExecutor",

@@ -42,7 +42,14 @@ from repro.runtime.kv_cache import scatter_prompt_into_pool
 
 
 class PartitionExecutor:
-    """Run ``model`` split after ``cut_layer`` transformer layers."""
+    """Run ``model`` split after ``cut_layer`` transformer layers.
+
+    Heterogeneous fleets run several cuts concurrently: ``with_cut`` derives
+    a sibling executor at a different boundary that SHARES the per-layer
+    parameter slices (jax arrays are immutable, the edge/cloud tuples are
+    views), so a frontier of k cuts costs one slicing pass plus k cheap
+    boundary re-partitions — not k copies of the model.
+    """
 
     def __init__(
         self,
@@ -50,6 +57,7 @@ class PartitionExecutor:
         params,
         cut_layer: int,
         channel: Optional[ChannelConfig] = None,
+        _shared: Optional[Tuple[tuple, Dict[str, Any]]] = None,
     ):
         cfg = model.cfg
         if cfg.encoder_decoder:
@@ -62,24 +70,38 @@ class PartitionExecutor:
         self.channel = channel or ChannelConfig()
         self.shipped_bytes = 0.0
 
-        # per-layer params with the stacked repeats dim sliced out
-        per_layer = []
-        for i in range(cfg.num_layers):
-            j, r = i % model.period, i // model.period
-            per_layer.append(jax.tree.map(lambda a: a[r], params["unit"][j]))
-        sp: Dict[str, Any] = {
-            "embed": params["embed"],
-            "final_norm": params["final_norm"],
-            "edge": tuple(per_layer[:cut_layer]),
-            "cloud": tuple(per_layer[cut_layer:]),
-        }
-        if "mod_proj" in params:
-            sp["mod_proj"] = params["mod_proj"]
-        if "lm_head" in params:
-            sp["lm_head"] = params["lm_head"]
+        if _shared is None:
+            # per-layer params with the stacked repeats dim sliced out
+            per_layer = []
+            for i in range(cfg.num_layers):
+                j, r = i % model.period, i // model.period
+                per_layer.append(jax.tree.map(lambda a: a[r], params["unit"][j]))
+            base: Dict[str, Any] = {
+                "embed": params["embed"],
+                "final_norm": params["final_norm"],
+            }
+            if "mod_proj" in params:
+                base["mod_proj"] = params["mod_proj"]
+            if "lm_head" in params:
+                base["lm_head"] = params["lm_head"]
+            _shared = (tuple(per_layer), base)
+        self._per_layer, self._base = _shared
+        sp: Dict[str, Any] = dict(self._base)
+        sp["edge"] = self._per_layer[:cut_layer]
+        sp["cloud"] = self._per_layer[cut_layer:]
         self.split_params = sp
         self.edge_specs = model.specs[:cut_layer]
         self.cloud_specs = model.specs[cut_layer:]
+
+    def with_cut(self, cut_layer: int) -> "PartitionExecutor":
+        """A sibling executor at ``cut_layer`` sharing the sliced params."""
+
+        if cut_layer == self.cut_layer:
+            return self
+        return PartitionExecutor(
+            self.model, None, cut_layer, self.channel,
+            _shared=(self._per_layer, self._base),
+        )
 
     # ------------------------------------------------------------------
     # full-sequence split forward (the parity surface)

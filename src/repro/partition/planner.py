@@ -31,7 +31,9 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.partition.graph import InferenceGraph, build_graph
@@ -42,6 +44,15 @@ from repro.runtime.latency import HardwareModel, arch_hardware_model
 # (architecture-independent — the trigger reads sensors, not activations);
 # benchmarks/partition_bench.py re-derives it from the live trigger sim
 DEFAULT_OFFLOAD_FRACTION = 0.31
+
+# per-cut staleness profile: the edge prefix IS the redundancy monitor's
+# substrate, so a shallower prefix produces a staler redundancy estimate.
+# ``DEFAULT_STALE_MISS_RATE`` is the fraction of REPLAYED chunks a stem-only
+# monitor mis-classifies as redundant (divergence caught only by the safety
+# net); it decays linearly to zero as the edge prefix deepens to the full
+# stack.  Every miss costs a corrective cloud-only refetch — the robot
+# cannot trust its own prefix for the fix-up.
+DEFAULT_STALE_MISS_RATE = 0.5
 
 # deployment-class defaults: a Jetson-class edge box, an effectively
 # unbounded cloud pool
@@ -112,6 +123,10 @@ class CutEval:
     cloud_ms: float
     net_ms: float
     total_ms: float          # expected per-chunk: edge + f*(net + cloud)
+    # per-cut staleness profile (``per_cut_fraction=True`` pricing only)
+    stale_ms: float = 0.0    # expected corrective-refetch cost per chunk
+    sim_fraction: Optional[float] = None  # simulated cloudward fraction
+    # (planned offloads + staleness refetches) under THIS cut's profile
 
 
 @dataclass(frozen=True)
@@ -139,6 +154,9 @@ class PartitionPlan:
     edge_mem_gb: float
     channel: Dict[str, float] = field(default_factory=dict)
     pipelined: bool = False   # overlapped split-decode pricing used
+    per_cut_fraction: bool = False  # per-cut staleness pricing used
+    stale_ms: float = 0.0
+    sim_fraction: Optional[float] = None
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -169,6 +187,8 @@ def enumerate_cuts(
     edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
     cloud_mem_gb: float = float("inf"),
     pipelined: bool = False,
+    per_cut_fraction: bool = False,
+    stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
 ) -> List[CutEval]:
     """Score every cut of ``graph`` under ``hw`` + ``channel``.
 
@@ -176,10 +196,23 @@ def enumerate_cuts(
     two sides compute concurrently (``max(edge, cloud)`` instead of their
     sum on offloaded chunks) and each decode token pays one exposed channel
     leg instead of the full ping-pong.  Single-device cuts are unaffected.
+
+    ``per_cut_fraction``: simulate the trigger's offload behaviour under
+    each cut's OWN staleness profile instead of one global fraction.  The
+    edge prefix is the redundancy monitor's substrate, so a shallow prefix
+    mis-classifies ``stale_miss_rate * (1 - depth)`` of its replayed chunks
+    as redundant; every miss is charged a corrective cloud-only refetch
+    (observation upload + full-stack cloud inference — the robot cannot
+    trust its own prefix for the fix-up).  Deeper edge prefixes therefore
+    buy lower effective cloudward traffic, which is exactly the lever
+    ``assign_cuts`` uses to give high-redundancy robots deeper prefixes.
+    Boundary cuts are untouched: cut 0 never replays (``f = 1``) and the
+    full-depth prefix never goes stale.
     """
 
     channel = channel or hw.channel
     n = len(graph.nodes)
+    n_layers = max(n - 2, 1)
     # normalize graph bytes so the resident total matches the hardware
     # model's calibrated full_model_gb (the paper's 14.2 GB includes the
     # vision stack our stub under-counts; per-arch models scale by 1.0)
@@ -187,6 +220,13 @@ def enumerate_cuts(
 
     res = [nd.param_bytes * scale / 1e9 for nd in graph.nodes]
     exe = [nd.exec_bytes * scale / 1e9 for nd in graph.nodes]
+    # corrective refetch = the paper's cloud-only query shape over the FULL
+    # executed stack (cut-independent: a stale miss invalidates the local
+    # chunk wholesale)
+    refetch_ms = (
+        query_latency_ms(channel, hw.chunk_len) + hw.cloud_time_ms(sum(exe))
+        if per_cut_fraction else 0.0
+    )
     evals: List[CutEval] = []
     for cut in range(n + 1):
         edge_gb = sum(res[:cut])
@@ -231,6 +271,13 @@ def enumerate_cuts(
             )
         else:
             total = edge_ms + f_eff * (net + cloud_ms)
+        stale_ms, sim_fraction = 0.0, None
+        if per_cut_fraction:
+            depth = graph.cut_layers(cut) / n_layers if cut > 0 else 0.0
+            miss = stale_miss_rate * (1.0 - depth)
+            stale_ms = (1.0 - f_eff) * miss * refetch_ms
+            sim_fraction = min(1.0, f_eff + (1.0 - f_eff) * miss)
+            total += stale_ms
         feasible = edge_gb <= edge_mem_gb + 1e-9 and cloud_gb <= cloud_mem_gb + 1e-9
         evals.append(
             CutEval(
@@ -245,6 +292,8 @@ def enumerate_cuts(
                 cloud_ms=cloud_ms,
                 net_ms=net,
                 total_ms=total,
+                stale_ms=stale_ms,
+                sim_fraction=sim_fraction,
             )
         )
     return evals
@@ -261,6 +310,8 @@ def evaluate_cut(
     cloud_mem_gb: float = float("inf"),
     graph: Optional[InferenceGraph] = None,
     pipelined: bool = False,
+    per_cut_fraction: bool = False,
+    stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
 ) -> CutEval:
     """Re-price one FIXED cut under a (possibly different) offload fraction.
 
@@ -282,6 +333,8 @@ def evaluate_cut(
         edge_mem_gb=edge_mem_gb,
         cloud_mem_gb=cloud_mem_gb,
         pipelined=pipelined,
+        per_cut_fraction=per_cut_fraction,
+        stale_miss_rate=stale_miss_rate,
     )
     if not 0 <= cut < len(evals):
         raise ValueError(f"cut {cut} outside [0, {len(evals) - 1}]")
@@ -300,6 +353,8 @@ def plan_partition(
     chunk_tokens: Optional[int] = None,
     graph: Optional[InferenceGraph] = None,
     pipelined: bool = False,
+    per_cut_fraction: bool = False,
+    stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
 ) -> PartitionPlan:
     """Choose the compatibility-optimal cut for ``cfg``.
 
@@ -307,6 +362,9 @@ def plan_partition(
     architecture's parameter bytes (``arch_hardware_model``).
     ``pipelined=True`` prices interior cuts with overlapped split decode
     (never worse than the serial ping-pong, so splits only get MORE viable).
+    ``per_cut_fraction=True`` grows ``offload_fraction`` into a per-cut
+    simulated fraction under each cut's own staleness profile — shallow
+    edge prefixes are charged corrective refetches on the replayed share.
     """
 
     if graph is None:
@@ -324,6 +382,8 @@ def plan_partition(
         edge_mem_gb=edge_mem_gb,
         cloud_mem_gb=cloud_mem_gb,
         pipelined=pipelined,
+        per_cut_fraction=per_cut_fraction,
+        stale_miss_rate=stale_miss_rate,
     )
     feasible = [e for e in evals if e.feasible]
     if not feasible:
@@ -360,4 +420,216 @@ def plan_partition(
         edge_mem_gb=edge_mem_gb,
         channel=dataclasses.asdict(channel),
         pipelined=pipelined,
+        per_cut_fraction=per_cut_fraction,
+        stale_ms=best.stale_ms,
+        sim_fraction=best.sim_fraction,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-robot cut assignment (heterogeneous fleets)
+# ---------------------------------------------------------------------------
+
+# floor applied to realized fractions before assignment: a robot that never
+# offloaded still needs the occasional refresh priced in, and f = 0 would
+# degenerate interior cuts to prefix-only cost
+FRACTION_FLOOR = 0.02
+
+
+@dataclass(frozen=True)
+class CutAssignment:
+    """Per-robot cut assignment over a small frontier of concurrent cuts.
+
+    ``cuts[r]`` is robot ``r``'s node-space cut (0 = cloud-only, ``n_nodes``
+    = edge-only), ``cut_layers[r]`` the matching edge-resident transformer
+    layer count (``-1`` for cloud-only robots, which keep no edge prefix at
+    all — not even the stem).  ``frontier`` lists the distinct active cuts,
+    at most ``k_max`` of them.  ``total_ms`` sums each robot's expected
+    per-chunk latency at its REALIZED offload fraction under per-cut
+    staleness pricing; ``best_single_ms`` is the same fleet served on the
+    best single global cut — the assignment is never worse (a constant
+    assignment is always in the monotone feasible set).
+    """
+
+    arch: str
+    cuts: Tuple[int, ...]
+    cut_layers: Tuple[int, ...]
+    fractions: Tuple[float, ...]       # clipped realized per-robot fractions
+    frontier: Tuple[int, ...]          # distinct active cuts, ascending
+    per_robot_ms: Tuple[float, ...]
+    total_ms: float
+    best_single_cut: int
+    best_single_ms: float
+    k_max: int
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    def summary(self) -> str:
+        by_cut: Dict[int, int] = {}
+        for c in self.cuts:
+            by_cut[c] = by_cut.get(c, 0) + 1
+        lanes = " ".join(f"cut{c}x{by_cut[c]}" for c in sorted(by_cut))
+        return (
+            f"{self.arch}: {len(self.frontier)} active cut(s) [{lanes}] "
+            f"fleet {self.total_ms:.1f}ms vs best single cut "
+            f"{self.best_single_cut} @ {self.best_single_ms:.1f}ms "
+            f"({self.best_single_ms - self.total_ms:+.1f}ms saved)"
+        )
+
+
+def assign_cuts(
+    telemetry: Union[Sequence[float], np.ndarray, "object"],
+    k_max: int = 3,
+    *,
+    cfg: Optional[ModelConfig] = None,
+    hw: Optional[HardwareModel] = None,
+    channel: Optional[ChannelConfig] = None,
+    edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
+    cloud_mem_gb: float = float("inf"),
+    graph: Optional[InferenceGraph] = None,
+    pipelined: bool = False,
+    stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
+    max_cut: Optional[int] = None,
+) -> CutAssignment:
+    """Map each robot's realized offload fraction to a cut from a frontier.
+
+    ``max_cut`` caps the deepest assignable cut — serving callers pass
+    ``len(graph.nodes) - 1`` to exclude the pure edge-only deployment the
+    split executor cannot run (the LM head always lives cloud-side), so
+    fully-redundant robots land on the deepest EXECUTABLE split and are
+    priced with its real ping-pong cost instead of edge-only's zero net.
+
+    ``telemetry`` is a ``FleetTelemetry`` (its ``offload_fractions()`` are
+    used) or a plain sequence of per-robot realized fractions.  Every cut is
+    priced per robot with ``per_cut_fraction`` staleness pricing at that
+    robot's fraction; the fleet assignment is then the exact minimizer of
+    the summed per-chunk latency subject to two deployment constraints:
+
+      * **monotone**: a robot with higher realized redundancy (lower
+        fraction) never gets a *shallower* edge prefix than a robot with
+        lower redundancy — the frontier orders robots by how much they
+        lean on their local monitor;
+      * **at most ``k_max`` distinct cuts** — each active cut costs a
+        sliced parameter set and a suffix pool group on the cloud, so the
+        frontier stays small.
+
+    Solved by DP over robots sorted by fraction (descending) with
+    non-decreasing cuts; a constant assignment is always feasible, so the
+    result is never worse than the best single global cut at the same
+    telemetry.
+    """
+
+    fractions = np.asarray(
+        telemetry.offload_fractions()
+        if hasattr(telemetry, "offload_fractions") else telemetry,
+        np.float64,
+    )
+    if fractions.ndim != 1 or fractions.shape[0] == 0:
+        raise ValueError("telemetry must carry at least one robot's fraction")
+    if k_max < 1:
+        raise ValueError("k_max must be >= 1")
+    if cfg is None and graph is None:
+        raise ValueError("assign_cuts needs cfg= or graph=")
+    if graph is None:
+        graph = build_graph(cfg)
+    if hw is None:
+        hw = arch_hardware_model(int(graph.total_param_bytes))
+    channel = channel or hw.channel
+    arch = cfg.name if cfg is not None else graph.arch
+
+    clipped = np.clip(fractions, FRACTION_FLOOR, 1.0)
+    n_cuts = len(graph.nodes) + 1
+    n_robots = clipped.shape[0]
+
+    # per-robot cost table (cache identical fractions — evaluation is the
+    # expensive part for big graphs)
+    cost = np.full((n_robots, n_cuts), np.inf)
+    eval_cache: Dict[float, List[CutEval]] = {}
+    for r, f in enumerate(clipped):
+        key = float(f)
+        evals = eval_cache.get(key)
+        if evals is None:
+            evals = enumerate_cuts(
+                graph, hw, channel,
+                offload_fraction=key,
+                edge_mem_gb=edge_mem_gb,
+                cloud_mem_gb=cloud_mem_gb,
+                pipelined=pipelined,
+                per_cut_fraction=True,
+                stale_miss_rate=stale_miss_rate,
+            )
+            eval_cache[key] = evals
+        for e in evals:
+            if e.feasible and (max_cut is None or e.cut <= max_cut):
+                cost[r, e.cut] = e.total_ms
+    if not np.isfinite(cost).any(axis=1).all():
+        raise ValueError(f"no feasible cut for some robot of {arch}")
+
+    # DP over robots in DESCENDING fraction order: cuts must be
+    # non-decreasing along the order (lower fraction -> deeper-or-equal).
+    order = np.argsort(-clipped, kind="stable")
+    m = cost[order]
+    # dp[c, k]: best cost so far with the current robot on cut c using at
+    # most k+1 distinct cuts; parents remember (prev_cut) per (robot, c, k).
+    dp = np.tile(m[0][:, None], (1, k_max))
+    parent = np.full((n_robots, n_cuts, k_max), -1, np.int64)
+    for i in range(1, n_robots):
+        ndp = np.full_like(dp, np.inf)
+        for k in range(k_max):
+            # stay on the same cut (distinct count unchanged)
+            stay = dp[:, k]
+            ndp[:, k] = stay
+            parent[i, :, k] = np.arange(n_cuts)
+            if k > 0:
+                # move to a strictly deeper cut (one more distinct cut)
+                prev = dp[:, k - 1]
+                best_prev = np.full(n_cuts, np.inf)
+                best_arg = np.full(n_cuts, -1, np.int64)
+                run_min, run_arg = np.inf, -1
+                for c in range(n_cuts):
+                    best_prev[c], best_arg[c] = run_min, run_arg
+                    if prev[c] < run_min:
+                        run_min, run_arg = prev[c], c
+                deeper = best_prev
+                take = deeper < ndp[:, k]
+                ndp[take, k] = deeper[take]
+                parent[i, take, k] = best_arg[take]
+        dp = ndp + m[i][:, None]
+    # the at-most-k recurrence makes dp[:, k_max-1] the global optimum
+    end_c = int(np.argmin(dp[:, k_max - 1]))
+    total = float(dp[end_c, k_max - 1])
+
+    # backtrack (re-deriving the distinct-count lane from the parents)
+    assigned_sorted = np.empty(n_robots, np.int64)
+    c, k = end_c, k_max - 1
+    for i in range(n_robots - 1, -1, -1):
+        assigned_sorted[i] = c
+        if i:
+            prev_c = int(parent[i, c, k])
+            if prev_c != c:
+                k -= 1
+            c = prev_c
+    cuts = np.empty(n_robots, np.int64)
+    cuts[order] = assigned_sorted
+
+    fleet_by_cut = cost.sum(axis=0)       # inf where any robot infeasible
+    best_single_cut = int(np.argmin(fleet_by_cut))
+    best_single_ms = float(fleet_by_cut[best_single_cut])
+
+    cut_layers = tuple(
+        graph.cut_layers(int(c)) if c > 0 else -1 for c in cuts
+    )
+    per_robot = tuple(float(cost[r, cuts[r]]) for r in range(n_robots))
+    return CutAssignment(
+        arch=arch,
+        cuts=tuple(int(c) for c in cuts),
+        cut_layers=cut_layers,
+        fractions=tuple(float(f) for f in clipped),
+        frontier=tuple(sorted({int(c) for c in cuts})),
+        per_robot_ms=per_robot,
+        total_ms=total,
+        best_single_cut=best_single_cut,
+        best_single_ms=best_single_ms,
+        k_max=k_max,
     )

@@ -57,7 +57,8 @@ class ChunkRequest:
     robot_id: int
     obs: np.ndarray          # [S_obs] observation token ids
     submitted_round: int
-    order: int = 0           # global FIFO position across both lanes
+    order: int = 0           # global FIFO position across all lanes
+    earliest_round: int = 0  # admission deferral (cancellation-aware)
 
 
 @dataclass(frozen=True)
@@ -78,6 +79,7 @@ class ChunkResult:
     completed_round: int
     kind: str = "cloud"      # "cloud" (full stack) | "split" (cloud suffix)
     pool: Optional[PoolStats] = None
+    cut: Optional[int] = None  # split kind: the lane's edge layer count
 
 
 @dataclass
@@ -130,8 +132,10 @@ class ContinuousBatchingScheduler:
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0        # rounds where both kinds decoded
+        self.hetero_rounds = 0       # rounds where >= 2 distinct cuts decoded
         self.decode_rounds = 0       # rounds where any sequence decoded
         self.cancelled = 0           # sequences cancelled mid-flight
+        self.deferred = 0            # submissions admitted late on purpose
         self.last_round_kinds: Tuple[int, int] = (0, 0)  # (cloud, split)
 
         # KV page accounting: a request needs prompt + chunk tokens resident
@@ -149,7 +153,10 @@ class ContinuousBatchingScheduler:
         self._queue: Deque[ChunkRequest] = deque()
         self._seqs: Dict[int, _Sequence] = {}    # row -> sequence
         self._free_rows: List[int] = list(range(max_slots))
-        self._split: Optional["_SplitLane"] = None
+        # cut-keyed split-lane registry: one lane (sliced params + suffix
+        # pool group) per DISTINCT active cut, all drawing pages from the
+        # one allocator above
+        self._lanes: Dict[int, "_SplitLane"] = {}
         self._order = 0
 
         self._token_floor = tokenizer.action_base
@@ -177,26 +184,58 @@ class ContinuousBatchingScheduler:
         ``executor`` is a ``PartitionExecutor`` over the same model family;
         its suffix KV draws pages from this scheduler's allocator, so cloud-
         only sequences and split suffixes compete for (and are bounded by)
-        the same pool.
+        the same pool.  Call once per DISTINCT cut to serve a heterogeneous
+        fleet: each call registers a lane keyed by ``executor.cut_layer``,
+        and robots on different cuts still share decode rounds and the one
+        page allocator.
         """
 
-        self._split = _SplitLane(self, executor, rows)
+        cut = executor.cut_layer
+        if cut in self._lanes:
+            raise ValueError(f"cut {cut} already has a lane attached")
+        self._lanes[cut] = _SplitLane(self, executor, rows)
+
+    def _lane_for(self, cut: Optional[int]) -> "_SplitLane":
+        if not self._lanes:
+            raise ValueError("no PartitionExecutor attached; call attach_partition")
+        if cut is None:
+            if len(self._lanes) > 1:
+                raise ValueError(
+                    f"multiple cuts attached {sorted(self._lanes)}; pass cut="
+                )
+            return next(iter(self._lanes.values()))
+        if cut not in self._lanes:
+            raise ValueError(f"no lane for cut {cut}; attached: {sorted(self._lanes)}")
+        return self._lanes[cut]
 
     def submit(
         self, robot_id: int, qd: np.ndarray, tau: np.ndarray,
-        partitioned: bool = False,
+        partitioned: bool = False, cut: Optional[int] = None,
+        defer_rounds: int = 0,
     ) -> None:
-        """Queue one chunk request for ``robot_id`` (qd/tau [1, N])."""
+        """Queue one chunk request for ``robot_id`` (qd/tau [1, N]).
+
+        ``cut`` routes a partitioned robot to its assigned lane (optional
+        while a single lane is attached).  ``defer_rounds`` delays admission
+        (not submission order): the request keeps its FIFO slot but won't be
+        prefilled for that many rounds — cancellation-aware admission uses
+        one round, so a robot whose trigger preempts hot pays a queue
+        removal, not a wasted batched prefill, when the next fire lands.
+        """
 
         obs = np.concatenate(
             [self.tok.encode_state(qd), self.tok.encode_state(tau)], axis=1
         )[0]
         self._order += 1
-        req = ChunkRequest(robot_id, obs, self.round, order=self._order)
+        req = ChunkRequest(
+            robot_id, obs, self.round, order=self._order,
+            earliest_round=self.round + max(defer_rounds, 0) + 1
+            if defer_rounds > 0 else 0,
+        )
+        if defer_rounds > 0:
+            self.deferred += 1
         if partitioned:
-            if self._split is None:
-                raise ValueError("no PartitionExecutor attached; call attach_partition")
-            self._split.queue.append(req)
+            self._lane_for(cut).queue.append(req)
         else:
             self._queue.append(req)
 
@@ -212,9 +251,7 @@ class ContinuousBatchingScheduler:
         were already released by completion, so nothing is double-freed.
         """
 
-        for lane_queue in filter(None, (
-            self._queue, self._split.queue if self._split else None,
-        )):
+        for lane_queue in (self._queue, *(l.queue for l in self._lanes.values())):
             for req in lane_queue:
                 if req.robot_id == robot_id:
                     lane_queue.remove(req)
@@ -225,21 +262,27 @@ class ContinuousBatchingScheduler:
                 self._release(seq)
                 self.cancelled += 1
                 return True
-        if self._split is not None:
-            for seq in self._split.seqs.values():
+        for lane in self._lanes.values():
+            for seq in lane.seqs.values():
                 if seq.robot_id == robot_id:
-                    self._split.release(seq)
+                    lane.release(seq)
                     self.cancelled += 1
                     return True
         return False
 
     @property
     def n_pending(self) -> int:
-        return len(self._queue) + (len(self._split.queue) if self._split else 0)
+        return len(self._queue) + sum(len(l.queue) for l in self._lanes.values())
 
     @property
     def n_active(self) -> int:
-        return len(self._seqs) + (len(self._split.seqs) if self._split else 0)
+        return len(self._seqs) + sum(len(l.seqs) for l in self._lanes.values())
+
+    @property
+    def active_cuts(self) -> List[int]:
+        """Distinct cuts with in-flight suffixes this instant (ascending)."""
+
+        return sorted(c for c, l in self._lanes.items() if l.seqs)
 
     def pool_stats(self) -> PoolStats:
         return PoolStats(
@@ -258,13 +301,15 @@ class ContinuousBatchingScheduler:
         self._logits = jnp.zeros_like(self._logits)
         self._pcache["len"] = jnp.zeros((self.rows,), jnp.int32)
         self._pcache["cap"] = jnp.zeros((self.rows,), jnp.int32)
-        if self._split is not None:
-            self._split.reset()
+        for lane in self._lanes.values():
+            lane.reset()
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0
+        self.hetero_rounds = 0
         self.decode_rounds = 0
         self.cancelled = 0
+        self.deferred = 0
         self.last_round_kinds = (0, 0)
 
     # ------------------------------------------------------------------
@@ -381,27 +426,33 @@ class ContinuousBatchingScheduler:
         return seq
 
     def _try_admit(self) -> None:
-        """Admit pending requests FIFO across BOTH lanes — a partitioned
-        robot's suffix and a cloud-only robot compete for the same pages in
-        submission order, so neither kind can starve the other."""
+        """Admit pending requests FIFO across ALL lanes — partitioned
+        suffixes (any cut) and cloud-only robots compete for the same pages
+        in submission order, so no kind can starve another.  A head whose
+        ``earliest_round`` lies in the future holds its lane back this round
+        (deferred admissions keep their FIFO slot)."""
 
         new: List[_Sequence] = []
-        new_split = []
+        new_split: Dict[int, list] = {}
         while self.allocator.num_free >= self.pages_per_req:
             heads = []
-            if self._queue:
-                heads.append((self._queue[0].order, 0))
-            if self._split is not None and self._split.queue:
-                heads.append((self._split.queue[0].order, 1))
+            if self._queue and self._queue[0].earliest_round <= self.round:
+                heads.append((self._queue[0].order, None))
+            for cut, lane in self._lanes.items():
+                if lane.queue and lane.queue[0].earliest_round <= self.round:
+                    heads.append((lane.queue[0].order, cut))
             if not heads:
                 break
-            _, lane = min(heads)
-            if lane == 0:
+            _, cut = min(heads)
+            if cut is None:
                 new.append(self._reserve(self._queue.popleft()))
             else:
-                new_split.append(self._split.reserve(self._split.queue.popleft()))
-        if new_split:
-            self._split.flush(new_split)
+                lane = self._lanes[cut]
+                new_split.setdefault(cut, []).append(
+                    lane.reserve(lane.queue.popleft())
+                )
+        for cut, seqs in new_split.items():
+            self._lanes[cut].flush(seqs)
         if not new:
             return
         n = _bucket(len(new))
@@ -436,11 +487,11 @@ class ContinuousBatchingScheduler:
 
         self.round += 1
         self._try_admit()
-        n_cloud, n_split = len(self._seqs), (
-            len(self._split.seqs) if self._split else 0
-        )
+        n_cloud = len(self._seqs)
+        n_split = sum(len(l.seqs) for l in self._lanes.values())
         self.last_round_kinds = (n_cloud, n_split)
         self.mixed_rounds += n_cloud > 0 and n_split > 0
+        self.hetero_rounds += len(self.active_cuts) >= 2
         self.decode_rounds += n_cloud > 0 or n_split > 0
         self.peak_active = max(self.peak_active, n_cloud + n_split)
         done: List[ChunkResult] = []
@@ -465,8 +516,9 @@ class ContinuousBatchingScheduler:
                         kind="cloud",
                         pool=self.pool_stats(),
                     ))
-        if self._split is not None and n_split:
-            done.extend(self._split.step(block))
+        for lane in self._lanes.values():
+            if lane.seqs:
+                done.extend(lane.step(block))
         return done
 
     def drain(self, max_rounds: int = 10_000) -> List[ChunkResult]:
@@ -515,38 +567,60 @@ class _SplitLane:
         assert isinstance(executor, PartitionExecutor)
         self.sched = sched
         self.ex = executor
+        self.cut = executor.cut_layer
         self.rows = rows
         self.queue: Deque[ChunkRequest] = deque()
         self.seqs: Dict[int, _SplitSeq] = {}
         self._free_rows: List[int] = list(range(rows))
         # the suffix pools share the scheduler's pool geometry (and pages)
         self.ex.build_suffix_fns(sched.paged_spec, extra=sched.total_tokens)
-        self._layers = self.ex.init_suffix_pools(sched.paged_spec, rows)
+        # row arrays (suffix pools + per-row state) are allocated lazily and
+        # DROPPED whenever the lane empties — with a frontier of concurrent
+        # lanes, an idle cut must not pin a full page-pool-sized KV copy
+        self._layers = None
+        self._pt = self._len = self._cap = self._logits = None
+
+    @property
+    def has_buffers(self) -> bool:
+        return self._layers is not None
+
+    def _ensure_buffers(self) -> None:
+        if self._layers is not None:
+            return
+        sched = self.sched
+        self._layers = self.ex.init_suffix_pools(sched.paged_spec, self.rows)
         # host-side row bookkeeping shipped into every suffix call
-        self._pt = np.zeros((rows, sched.pages_per_req), np.int32)
-        self._len = np.zeros((rows,), np.int32)
-        self._cap = np.zeros((rows,), np.int32)
-        self._logits = np.zeros((rows, sched._vdim), np.float32)
+        self._pt = np.zeros((self.rows, sched.pages_per_req), np.int32)
+        self._len = np.zeros((self.rows,), np.int32)
+        self._cap = np.zeros((self.rows,), np.int32)
+        self._logits = np.zeros((self.rows, sched._vdim), np.float32)
+
+    def _drop_buffers(self) -> None:
+        """Free the lane's device row arrays (nothing in flight refers to
+        them); ``_ensure_buffers`` rebuilds zeros on the next admission."""
+
+        self._layers = None
+        self._pt = self._len = self._cap = self._logits = None
 
     def reset(self) -> None:
         self.queue.clear()
         self.seqs.clear()
         self._free_rows = list(range(self.rows))
-        self._len[:] = 0
-        self._cap[:] = 0
+        self._drop_buffers()
 
     def _grow_rows(self) -> None:
         old, new = self.rows, self.rows * 2
         pad = new - old
-        self._layers = self.ex.pad_suffix_rows(self._layers, pad)
-        self._pt = np.concatenate(
-            [self._pt, np.zeros((pad, self.sched.pages_per_req), np.int32)]
-        )
-        self._len = np.concatenate([self._len, np.zeros((pad,), np.int32)])
-        self._cap = np.concatenate([self._cap, np.zeros((pad,), np.int32)])
-        self._logits = np.concatenate(
-            [self._logits, np.zeros((pad, self._logits.shape[1]), np.float32)]
-        )
+        if self._layers is not None:
+            self._layers = self.ex.pad_suffix_rows(self._layers, pad)
+            self._pt = np.concatenate(
+                [self._pt, np.zeros((pad, self.sched.pages_per_req), np.int32)]
+            )
+            self._len = np.concatenate([self._len, np.zeros((pad,), np.int32)])
+            self._cap = np.concatenate([self._cap, np.zeros((pad,), np.int32)])
+            self._logits = np.concatenate(
+                [self._logits, np.zeros((pad, self._logits.shape[1]), np.float32)]
+            )
         self._free_rows.extend(range(old, new))
         self.rows = new
 
@@ -557,12 +631,18 @@ class _SplitLane:
 
     def release(self, seq: _SplitSeq) -> None:
         """Return pages + row; zero the row's capacity so in-flight batches
-        can never write into pages a later admission reuses."""
+        can never write into pages a later admission reuses.  When the last
+        member leaves (completion OR cancel), the lane's row arrays are
+        released too — not just the row — so an emptied lane holds no
+        device memory."""
 
         self.sched.allocator.free(seq.pages)
         del self.seqs[seq.row]
         self._free_rows.append(seq.row)
-        self._cap[seq.row] = 0
+        if self.seqs:
+            self._cap[seq.row] = 0
+        else:
+            self._drop_buffers()
 
     def reserve(self, req: ChunkRequest) -> _SplitSeq:
         sched = self.sched
@@ -588,6 +668,7 @@ class _SplitLane:
         """Batched cloud-suffix prefill over the reserved admissions."""
 
         sched = self.sched
+        self._ensure_buffers()
         n = _bucket(len(new))
         s = sched.prompt_len
         x = np.zeros((n, s, self.ex.cfg.d_model), np.float32)
@@ -654,5 +735,6 @@ class _SplitLane:
                         completed_round=sched.round,
                         kind="split",
                         pool=sched.pool_stats(),
+                        cut=self.cut,
                     ))
         return done

@@ -157,18 +157,30 @@ def test_bench_partition_rows(tmp_path):
 
     path = tmp_path / "BENCH_partition.json"
     rows, n_split = bench_rows(offload_fraction=0.31, out_path=str(path))
-    assert len(rows) == len(ARCH_IDS)
+    assert len(rows) == 2 * len(ARCH_IDS)  # planner row + hetero-fleet row
     assert n_split > 0, "no architecture/profile ever benefits from a split"
     import json
 
     data = json.load(open(path))
-    cells = {k: v for k, v in data.items() if isinstance(v, dict)}
+    cells = {
+        k: v for k, v in data.items()
+        if isinstance(v, dict) and not k.startswith("hetero|")
+    }
     assert len(cells) == len(ARCH_IDS) * len(NETWORK_PROFILES)
     for key, cell in cells.items():
         anchors = [
             cell[k] for k in ("edge_only_ms", "cloud_only_ms") if cell[k] is not None
         ]
         assert cell["total_ms"] <= min(anchors) + 1e-6, key
+    # heterogeneous fleet rows: per-robot cuts never lose to the best
+    # single global cut at the same telemetry, and at least one cell runs
+    # a genuine >= 2-cut frontier
+    hetero = {k: v for k, v in data.items() if k.startswith("hetero|")}
+    assert len(hetero) == len(ARCH_IDS) * len(NETWORK_PROFILES)
+    for key, cell in hetero.items():
+        assert cell["fleet_total_ms"] <= cell["best_single_ms"] + 1e-6, key
+        assert len(cell["frontier"]) <= 3, key
+    assert data["hetero_frontier_cells"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -326,3 +338,210 @@ def test_replan_from_telemetry_compares_plans():
     assert plan.offload_fraction in (0.12, 0.0, 1.0)  # forced at boundary cuts
     assert plan.total_ms <= repriced.total_ms + 1e-9
     assert repriced.cut == global_plan.cut
+
+
+# ---------------------------------------------------------------------------
+# per-cut staleness fractions (each cut's own trigger profile)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ("openvla-7b", "gemma2-9b"))
+def test_per_cut_fraction_charges_shallow_prefixes(arch):
+    """Per-cut staleness pricing: boundary cuts untouched, interior cuts pay
+    a replay-staleness refetch that shrinks monotonically with edge depth,
+    and the simulated fraction interpolates planned-f .. 1 accordingly."""
+
+    cfg = get_config(arch)
+    graph = build_graph(cfg)
+    hw = arch_hardware_model(int(graph.total_param_bytes))
+    for profile, channel in NETWORK_PROFILES.items():
+        plain = enumerate_cuts(graph, hw, channel)
+        sim = enumerate_cuts(graph, hw, channel, per_cut_fraction=True)
+        n = len(graph.nodes)
+        for p, s in zip(plain, sim):
+            assert s.total_ms >= p.total_ms - 1e-9, (profile, p.cut)
+            assert s.stale_ms >= 0.0
+            if p.cut in (0, n):
+                # cut 0 never replays (f forced to 1); the full-depth
+                # prefix never goes stale
+                assert s.total_ms == pytest.approx(p.total_ms)
+                assert s.stale_ms == 0.0
+            else:
+                assert s.sim_fraction >= s.offload_fraction - 1e-12
+                assert s.sim_fraction <= 1.0
+        # staleness cost decreases as the edge prefix deepens (same f)
+        interior = [s for s in sim if 0 < s.cut < n]
+        stales = [s.stale_ms for s in interior]
+        assert all(a >= b - 1e-9 for a, b in zip(stales, stales[1:]))
+        assert stales[0] > stales[-1], "depth must buy staleness down"
+
+
+def test_per_cut_fraction_plan_roundtrip():
+    from repro.partition.planner import PartitionPlan
+
+    plan = plan_partition(
+        get_config("openvla-7b"), channel=NETWORK_PROFILES["lan"],
+        per_cut_fraction=True,
+    )
+    assert plan.per_cut_fraction
+    again = PartitionPlan.from_json(plan.to_json())
+    assert again == plan
+
+
+# ---------------------------------------------------------------------------
+# per-robot cut assignment (heterogeneous fleets)
+# ---------------------------------------------------------------------------
+
+
+def test_assign_cuts_monotone_in_redundancy():
+    """Higher realized redundancy (lower offload fraction) never yields a
+    shallower edge prefix, for every network profile and fleet shape."""
+
+    from repro.partition.planner import assign_cuts
+
+    cfg = get_config("gemma2-9b")
+    graph = build_graph(cfg)
+    rng = np.random.default_rng(3)
+    fleets = [rng.uniform(0.02, 1.0, n) for n in (2, 5, 8)]
+    fleets.append(np.asarray([0.95, 0.6, 0.31, 0.12, 0.05, 0.02]))
+    for fractions in fleets:
+        for profile, channel in NETWORK_PROFILES.items():
+            a = assign_cuts(fractions, k_max=3, cfg=cfg, graph=graph,
+                            channel=channel)
+            for i in range(len(fractions)):
+                for j in range(len(fractions)):
+                    if fractions[i] < fractions[j]:
+                        assert a.cuts[i] >= a.cuts[j], (profile, fractions)
+            assert len(a.frontier) <= 3
+            assert set(a.cuts) == set(a.frontier)
+
+
+def test_assign_cuts_never_worse_than_best_single_cut():
+    """Acceptance: the heterogeneous assignment's fleet latency is <= the
+    best single global cut at the same telemetry (a constant assignment is
+    always monotone-feasible), and k_max=1 reproduces it exactly."""
+
+    from repro.partition.planner import assign_cuts
+
+    cfg = get_config("openvla-7b")
+    graph = build_graph(cfg)
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        fractions = rng.uniform(0.02, 1.0, 6)
+        for profile, channel in NETWORK_PROFILES.items():
+            for k in (1, 2, 4):
+                a = assign_cuts(fractions, k_max=k, cfg=cfg, graph=graph,
+                                channel=channel)
+                assert a.total_ms <= a.best_single_ms + 1e-9, (profile, k)
+                if k == 1:
+                    assert a.frontier == (a.best_single_cut,)
+                    assert a.total_ms == pytest.approx(a.best_single_ms)
+                assert a.total_ms == pytest.approx(sum(a.per_robot_ms))
+
+
+def test_assign_cuts_degenerate_fleets():
+    """All-cloud and all-edge fleets collapse to the single-device cuts."""
+
+    from repro.partition.planner import assign_cuts
+
+    # a fleet that always offloads: nothing to replay, the edge prefix is
+    # dead weight on WAN -> every robot goes cloud-only
+    cfg = get_config("openvla-7b")
+    all_cloud = assign_cuts([1.0] * 4, cfg=cfg,
+                            channel=NETWORK_PROFILES["wan"])
+    assert all_cloud.frontier == (0,)
+    assert all_cloud.cut_layers == (-1, -1, -1, -1)
+
+    # a tiny model on a congested link with a fully redundant fleet: every
+    # robot keeps the whole stack (edge-only is feasible at 0.25 GB)
+    small = get_config("xlstm-125m")
+    g = build_graph(small)
+    all_edge = assign_cuts([0.0] * 4, cfg=small, graph=g,
+                           channel=NETWORK_PROFILES["congested"])
+    n = len(g.nodes)
+    assert all_edge.frontier == (n,)
+    assert all(cl == small.num_layers for cl in all_edge.cut_layers)
+
+
+def test_assign_cuts_spread_fleet_is_heterogeneous():
+    """A fleet whose realized fractions straddle the cut threshold gets a
+    genuine frontier: >= 2 distinct cuts active at once."""
+
+    from repro.partition.planner import assign_cuts
+
+    cfg = get_config("gemma2-9b")
+    a = assign_cuts([0.95, 0.6, 0.31, 0.12, 0.05, 0.02], k_max=3, cfg=cfg,
+                    channel=NETWORK_PROFILES["wan"])
+    assert len(a.frontier) >= 2, a.frontier
+    assert a.total_ms < a.best_single_ms - 1e-9, "frontier must beat one cut"
+
+
+def test_assign_cuts_validates_inputs():
+    from repro.partition.planner import assign_cuts
+
+    cfg = get_config("openvla-7b")
+    with pytest.raises(ValueError):
+        assign_cuts([], cfg=cfg)
+    with pytest.raises(ValueError):
+        assign_cuts([0.5], k_max=0, cfg=cfg)
+    with pytest.raises(ValueError):
+        assign_cuts([0.5])  # neither cfg nor graph
+
+
+def test_assign_cuts_max_cut_excludes_edge_only():
+    """Serving callers cap the frontier at the deepest EXECUTABLE cut: the
+    split executor keeps the LM head cloud-side, so pure edge-only must not
+    be assignable — fully-redundant robots get the deepest split instead."""
+
+    from repro.partition.planner import assign_cuts
+
+    small = get_config("xlstm-125m")
+    g = build_graph(small)
+    n = len(g.nodes)
+    capped = assign_cuts(
+        [0.02] * 3, cfg=small, graph=g,
+        channel=NETWORK_PROFILES["congested"], max_cut=n - 1,
+    )
+    assert max(capped.cuts) <= n - 1
+    assert capped.best_single_cut <= n - 1
+    # uncapped, the same fleet prefers genuine edge-only
+    free = assign_cuts(
+        [0.02] * 3, cfg=small, graph=g, channel=NETWORK_PROFILES["congested"]
+    )
+    assert free.frontier == (n,)
+
+
+def test_assign_fleet_cuts_maps_onto_executable_splits():
+    """assign_fleet_cuts never routes a robot through a lane the split
+    executor cannot run: every assigned smoke cut is a real layer boundary
+    and edge-only plans are capped to the deepest split."""
+
+    from repro.launch.serve import assign_fleet_cuts
+
+    cfg = get_smoke_config("xlstm-125m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ex, robot_cuts, assignment = assign_fleet_cuts(
+        model, params, "xlstm-125m", [0.02, 0.02, 0.02, 0.02],
+        network="congested", verbose=False,
+    )
+    full_n = len(build_graph(get_config("xlstm-125m")).nodes)
+    assert max(assignment.cuts) <= full_n - 1, "edge-only leaked"
+    assert robot_cuts, "redundant fleet must keep edge prefixes"
+    assert all(0 <= c <= cfg.num_layers for c in robot_cuts.values())
+    assert ex is not None and ex.cut_layer in set(robot_cuts.values())
+
+
+def test_assign_cuts_accepts_fleet_telemetry():
+    """The live loop's FleetTelemetry plugs straight in."""
+
+    from repro.partition.planner import assign_cuts
+    from repro.runtime.policy import FleetTelemetry
+
+    tel = FleetTelemetry(3)
+    tel.fires += np.asarray([9, 3, 0])
+    tel.replays += np.asarray([1, 7, 10])
+    a = assign_cuts(tel, cfg=get_config("openvla-7b"),
+                    channel=NETWORK_PROFILES["wan"])
+    assert a.fractions == (0.9, 0.3, 0.02)  # floor applied to the 0.0 robot
+    assert a.cuts[0] <= a.cuts[1] <= a.cuts[2]

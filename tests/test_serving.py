@@ -328,6 +328,102 @@ def test_split_lane_shares_page_pool(f32_stack):
     assert sched.allocator.num_free == sched.allocator.num_pages
 
 
+def test_hetero_cuts_share_rounds_and_match_isolated(f32_stack):
+    """Acceptance: a mixed fleet with >= 2 distinct active cuts shares one
+    page allocator and decode rounds, and every robot's chunk matches its
+    isolated single-cut path exactly (f32)."""
+
+    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+
+    _, model, params, tok = f32_stack
+    ex1 = PartitionExecutor(model, params, cut_layer=1)
+    ex2 = ex1.with_cut(2)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=6)
+    sched.attach_partition(ex1)
+    sched.attach_partition(ex2)
+    rng = np.random.default_rng(41)
+    cuts = {0: None, 1: 1, 2: 2, 3: 1, 4: 2, 5: None}
+    reqs = [(r, *_obs(rng)) for r in cuts]
+    for r, qd, tau in reqs:
+        sched.submit(r, qd, tau, partitioned=cuts[r] is not None, cut=cuts[r])
+    results = {res.robot_id: res for res in sched.drain()}
+
+    assert sched.hetero_rounds > 0, "distinct cuts never decoded together"
+    assert sched.mixed_rounds > 0
+    assert {results[r].cut for r in cuts} == {None, 1, 2}
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+    policies = {
+        None: CloudPolicy(model, params, tok),
+        1: PartitionedPolicy(ex1, tok),
+        2: PartitionedPolicy(ex2, tok),
+    }
+    for r, qd, tau in reqs:
+        want = policies[cuts[r]](qd, tau)[0]
+        got = tok.decode_action(results[r].tokens).reshape(8, 7)
+        np.testing.assert_array_equal(want, got, err_msg=f"robot {r} cut {cuts[r]}")
+
+
+def test_hetero_lanes_no_leak_and_release_row_arrays(f32_stack):
+    """Satellite: cancelling a lane's last member releases the lane's row
+    arrays, not just its rows — and across >= 2 concurrent lanes the shared
+    pool drains to PoolStats.in_use == 0."""
+
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = f32_stack
+    ex1 = PartitionExecutor(model, params, cut_layer=1)
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=6)
+    sched.attach_partition(ex1)
+    sched.attach_partition(ex1.with_cut(2))
+    rng = np.random.default_rng(42)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng), partitioned=True, cut=1)
+    sched.submit(2, *_obs(rng), partitioned=True, cut=2)
+    sched.step()  # all admitted, all lanes mid-decode
+    assert sched.active_cuts == [1, 2]
+    assert all(lane.has_buffers for lane in sched._lanes.values())
+    # robot 2 was its lane's ONLY member: the cancel must drop the lane's
+    # device row arrays (suffix pools + row state), not just zero its row
+    assert sched.cancel(2)
+    assert not sched._lanes[2].has_buffers, "emptied lane kept row arrays"
+    assert sched._lanes[1].has_buffers, "lane with members must keep state"
+    assert sched.allocator.num_in_use == 2 * sched.pages_per_req
+    results = {res.robot_id for res in sched.drain()}
+    assert results == {0, 1}
+    assert sched.pool_stats().pages_in_use == 0, "leak across lanes"
+    assert sched.allocator.num_free == sched.allocator.num_pages
+    # completion also empties a lane -> its arrays are released too
+    assert not any(lane.has_buffers for lane in sched._lanes.values())
+
+
+def test_deferred_admission_holds_one_round(stack):
+    """A defer_rounds=1 submission keeps its FIFO slot but is not admitted
+    (no pages, no prefill) until the next round — and a cancel landing in
+    that window removes a queued request, never a paid prefill."""
+
+    _, model, params, tok = stack
+    rng = np.random.default_rng(43)
+
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=2)
+    sched.submit(0, *_obs(rng), defer_rounds=1)
+    sched.step()
+    assert sched.n_active == 0 and sched.n_pending == 1
+    assert sched.allocator.num_in_use == 0, "deferred request took pages"
+    sched.step()
+    assert sched.n_active == 1, "deferral must last exactly one round"
+    assert sched.deferred == 1
+    results = sched.drain()
+    assert len(results) == 1 and results[0].tokens.shape == (56,)
+
+    # cancel inside the deferral window: pure queue removal
+    sched.submit(1, *_obs(rng), defer_rounds=1)
+    sched.step()
+    assert sched.cancel(1)
+    assert sched.n_pending == 0 and sched.allocator.num_in_use == 0
+    assert sched.drain() == []
+
+
 def test_serve_fleet_mixed_end_to_end(stack):
     from repro.partition.executor import PartitionExecutor
 
@@ -341,6 +437,99 @@ def test_serve_fleet_mixed_end_to_end(stack):
     assert out["mixed_rounds"] > 0
     assert out["split_robots"] == [1]
     assert out["pool"].high_water > 0
+
+
+def test_serve_fleet_heterogeneous_cuts_end_to_end(stack):
+    """serve_fleet(robot_cuts=...) runs >= 2 distinct cuts in one fleet:
+    lanes are derived from the base executor via with_cut, decode rounds
+    are shared, and the pool drains clean."""
+
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    out = serve_fleet(
+        model, params, tok, n_robots=4, max_steps=60, max_slots=2,
+        partition_executor=ex, robot_cuts={1: 1, 2: 2, 3: 1}, verbose=False,
+    )
+    assert out["actions"].shape == (60, 4, 7)
+    assert out["robot_cuts"] == {1: 1, 2: 2, 3: 1}
+    assert out["active_cuts"] == [1, 2]
+    assert out["split_robots"] == [1, 2, 3]
+    assert out["hetero_rounds"] > 0, "distinct cuts never decoded together"
+    assert out["mixed_rounds"] > 0
+    assert out["pool"].high_water > 0
+    # whatever is still resident at episode end is in-flight work, a whole
+    # number of requests' pages — nothing leaked from completed chunks
+    assert out["pool"].pages_in_use % (-(-(14 + 56) // 16)) == 0
+
+
+def test_serve_fleet_hetero_matches_offline_decision_core(stack):
+    """Satellite: the heterogeneous fleet's recorded decision streams equal
+    the offline rollout bit-for-bit for every robot, whatever cut it was
+    assigned — cuts change WHERE a chunk is computed, never the decisions."""
+
+    from repro.core.kinematics import KinematicFrame
+    from repro.core.trigger import TriggerConfig
+    from repro.partition.executor import PartitionExecutor
+    from repro.robotics.episodes import generate_episode
+    from repro.runtime.policy import PolicyConfig, rollout
+
+    _, model, params, tok = stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    n_robots, max_steps, seed = 3, 200, 0
+    out = serve_fleet(
+        model, params, tok, n_robots=n_robots, max_steps=max_steps,
+        max_slots=2, seed=seed, trigger="rapid", record_streams=True,
+        partition_executor=ex, robot_cuts={0: 1, 2: 2}, verbose=False,
+    )
+    streams = out["telemetry"].streams()
+
+    tasks = ["pick_place", "drawer_open", "peg_insertion"]
+    eps = [
+        generate_episode(tasks[i % len(tasks)], seed=seed + i)
+        for i in range(n_robots)
+    ]
+    t_len = out["steps"]
+    frames = KinematicFrame(
+        q=jnp.asarray(np.stack([ep.q[:t_len] for ep in eps], 1)),
+        qd=jnp.asarray(np.stack([ep.qd[:t_len] for ep in eps], 1)),
+        tau=jnp.asarray(np.stack([ep.tau[:t_len] for ep in eps], 1)),
+    )
+    pcfg = PolicyConfig(
+        trigger=TriggerConfig(cooldown_steps=7), chunk_len=8, on_empty="reuse"
+    )
+    _, dec = jax.jit(lambda f: rollout(pcfg, f))(frames)
+    np.testing.assert_array_equal(streams["offload"], np.asarray(dec.offload))
+    np.testing.assert_array_equal(streams["replayed"], np.asarray(dec.replayed))
+    np.testing.assert_array_equal(streams["slot"], np.asarray(dec.slot))
+
+
+def test_serve_fleet_defer_hot_admission(stack):
+    """Cancellation-aware admission: with a hot trigger (cooldown shorter
+    than service time) and a zero threshold, preempting robots' admissions
+    are deferred — and the loop still completes chunks with exact page
+    accounting."""
+
+    from repro.core.trigger import TriggerConfig
+
+    _, model, params, tok = stack
+    kw = dict(
+        n_robots=2, max_steps=300, max_slots=2, trigger="rapid",
+        trigger_cfg=TriggerConfig(cooldown_steps=3), verbose=False,
+    )
+    out = serve_fleet(model, params, tok, defer_hot_admission=0.0, **kw)
+    tel = out["telemetry"]
+    assert out["deferred"] > 0, "hot preempts must defer admissions"
+    assert tel.cancels.sum() > 0
+    assert tel.completions.sum() > 0
+    pages_per_req = -(-(14 + 56) // 16)
+    in_flight = int(tel.fires.sum() - tel.completions.sum() - tel.cancels.sum())
+    assert out["pool"].pages_in_use <= in_flight * pages_per_req
+    # the decision core is untouched: same fires/replays with and without
+    base = serve_fleet(model, params, tok, **kw)
+    np.testing.assert_array_equal(tel.fires, base["telemetry"].fires)
+    np.testing.assert_array_equal(tel.replays, base["telemetry"].replays)
 
 
 # ---------------------------------------------------------------------------
