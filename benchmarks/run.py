@@ -37,7 +37,10 @@ def main(argv=None) -> None:
     # serving engine: runs in --fast mode too (tracks the perf trajectory)
     from benchmarks import serving_bench
 
-    _timed("serving_engine_speedup_8req", serving_bench.bench_rows, detail)
+    _timed(
+        "serving_engine_speedup_8req",
+        lambda: serving_bench.bench_rows()[:2], detail,
+    )
     # paged engine: slot-bounded vs page-bounded admission concurrency
     _timed("paged_engine_concurrency", serving_bench.bench_paged_rows, detail)
 
@@ -50,6 +53,8 @@ def main(argv=None) -> None:
     from benchmarks import partition_bench
 
     _timed("partition_planner_split_cells", partition_bench.bench_rows, detail)
+    # measured split serving: serial ping-pong vs pipelined windows
+    _timed("pipelined_split_profiles_ok", partition_bench.bench_pipelined_rows, detail)
     _timed("table1_vision_noise_degradation", tables.table1_vision_noise, detail)
     _timed("table3_simulation_speedup", tables.table3_simulation, detail)
     _timed("table4_realworld_speedup", tables.table4_real_world, detail)

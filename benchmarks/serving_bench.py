@@ -35,6 +35,10 @@ import numpy as np
 CHUNK_LEN = 8
 N_JOINTS = 7
 TOKENS_PER_CHUNK = CHUNK_LEN * N_JOINTS
+# decode rounds per jitted scan window in the engine runs (device-resident
+# decode): the host admits/harvests once per window instead of once per
+# round, which is what lets ragged admission beat gang scheduling
+SCAN_ROUNDS = 4
 
 
 def _stack():
@@ -104,22 +108,28 @@ def bench_rows():
     dt_seed = time.time() - t0
     out["serve8_seed_tok_s"] = n_req * TOKENS_PER_CHUNK / dt_seed
 
-    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=n_req)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=n_req, scan_rounds=SCAN_ROUNDS
+    )
 
-    def run_engine(stagger: bool, gang: bool) -> float:
-        sched.reset()
-        done = 0
-        submitted = 0
-        t0 = time.time()
-        while done < n_req:
-            if submitted < n_req and (not gang or sched.n_active == 0):
-                take = 2 if stagger else n_req
-                for _ in range(min(take, n_req - submitted)):
-                    sched.submit(submitted, *reqs[submitted])
-                    submitted += 1
-            done += len(sched.step())
-        return time.time() - t0
+    def run_engine(stagger: bool, gang: bool, repeats: int = 1) -> float:
+        def once() -> float:
+            sched.reset()
+            done = 0
+            submitted = 0
+            t0 = time.time()
+            while done < n_req:
+                if submitted < n_req and (not gang or sched.n_active == 0):
+                    take = 2 if stagger else n_req
+                    for _ in range(min(take, n_req - submitted)):
+                        sched.submit(submitted, *reqs[submitted])
+                        submitted += 1
+                done += len(sched.step())
+            return time.time() - t0
 
+        return min(once() for _ in range(repeats))
+
+    out["scan_rounds"] = SCAN_ROUNDS
     run_engine(stagger=False, gang=False)  # warm compile
     dt_engine = run_engine(stagger=False, gang=False)
     out["serve8_engine_tok_s"] = n_req * TOKENS_PER_CHUNK / dt_engine
@@ -131,8 +141,11 @@ def bench_rows():
     )
 
     # --- staggered arrivals: continuous (ragged) vs gang-scheduled --------
-    dt_ragged = run_engine(stagger=True, gang=False)
-    dt_gang = run_engine(stagger=True, gang=True)
+    # best-of-2 each: this ratio is a CI gate, so shave scheduler noise
+    run_engine(stagger=True, gang=False)  # warm the partial-batch variants
+    run_engine(stagger=True, gang=True)
+    dt_ragged = run_engine(stagger=True, gang=False, repeats=2)
+    dt_gang = run_engine(stagger=True, gang=True, repeats=2)
     out["ragged_tok_s"] = n_req * TOKENS_PER_CHUNK / dt_ragged
     out["gang_tok_s"] = n_req * TOKENS_PER_CHUNK / dt_gang
     out["ragged_vs_gang_speedup"] = out["ragged_tok_s"] / out["gang_tok_s"]
@@ -144,7 +157,7 @@ def bench_rows():
 
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
     _update_json(path, out)
-    return rows, round(speedup, 2)
+    return rows, round(speedup, 2), out
 
 
 def _update_json(path, out):
@@ -187,14 +200,16 @@ def bench_paged_rows():
     out = {}
     rows = []
     # pool sized to the legacy 8-slot engine vs sized for the whole burst
-    slot_pool = ContinuousBatchingScheduler(model, params, tok, max_slots=8)
+    slot_pool = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=8, scan_rounds=SCAN_ROUNDS
+    )
     page_pool = ContinuousBatchingScheduler(
-        model, params, tok, max_slots=8,
+        model, params, tok, max_slots=8, scan_rounds=SCAN_ROUNDS,
         num_pages=slot_pool.pages_per_req * n_burst,
     )
     for name, sched in (("slotpool", slot_pool), ("pagepool", page_pool)):
         run(sched)  # warm the jit caches (incl. row-growth variants)
-        dt = run(sched)
+        dt = min(run(sched), run(sched))
         out[f"{name}_tok_s"] = n_burst * TOKENS_PER_CHUNK / dt
         out[f"{name}_peak_concurrency"] = sched.peak_active
         out[f"{name}_kv_pages"] = sched.allocator.num_pages
@@ -212,18 +227,39 @@ def bench_paged_rows():
     return rows, round(speedup, 2)
 
 
-def main():
+def main(argv=None):
+    import argparse
+    import sys
+
+    p = argparse.ArgumentParser()
+    p.add_argument(
+        "--check-min-ragged-speedup", type=float, default=None, metavar="FLOOR",
+        help="exit non-zero if ragged_vs_gang_speedup lands below FLOOR "
+             "(the CI regression gate for the device-resident decode win)",
+    )
+    args = p.parse_args(argv)
+
     print("name,us_per_call,derived")
     t0 = time.time()
-    rows, derived = bench_rows()
+    rows, derived, out = bench_rows()
     print(f"serving_engine_speedup_8req,{(time.time() - t0) * 1e6:.0f},{derived}")
     for r in rows:
         print("   ", r)
     t0 = time.time()
-    rows, derived = bench_paged_rows()
+    prows, derived = bench_paged_rows()
     print(f"paged_engine_concurrency,{(time.time() - t0) * 1e6:.0f},{derived}")
-    for r in rows:
+    for r in prows:
         print("   ", r)
+    if args.check_min_ragged_speedup is not None:
+        got = out["ragged_vs_gang_speedup"]
+        floor = args.check_min_ragged_speedup
+        if got < floor:
+            print(
+                f"FAIL: ragged_vs_gang_speedup={got:.3f} below the "
+                f"recorded floor {floor:.3f}", file=sys.stderr,
+            )
+            sys.exit(1)
+        print(f"ragged gate OK: {got:.3f} >= {floor:.3f}")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ distinct cuts decode in the same scheduler rounds against one KV page pool.
     PYTHONPATH=src python examples/ecc_serving.py --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 6 --trigger rapid --assign-cuts
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --scan-rounds 4 --profile /tmp/trace
 """
 
 import argparse
@@ -72,6 +73,12 @@ def main(argv=None):
                    help="cancellation-aware admission: preempt-rate "
                         "threshold above which a preempting robot's "
                         "admission is held one round")
+    p.add_argument("--scan-rounds", type=int, default=1,
+                   help="decode rounds per jitted scan window; >1 keeps the "
+                        "decode loop device-resident between host syncs")
+    p.add_argument("--profile", default=None, metavar="DIR",
+                   help="wrap the fleet serve loop in jax.profiler.trace "
+                        "writing to DIR, and print per-window host-gap time")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -93,12 +100,20 @@ def main(argv=None):
             if executor is not None:
                 split = list(range(1, args.fleet, 2))
                 print(f"mixed fleet: robots {split} serve through the split")
-        out = serve_fleet(
-            model, params, tok, n_robots=args.fleet, max_steps=args.steps,
-            channel=NETWORK_PROFILES[args.network],
-            partition_executor=executor, split_robots=split,
-            trigger=args.trigger, defer_hot_admission=args.defer_hot,
+        import contextlib
+
+        profiling = (
+            jax.profiler.trace(args.profile)
+            if args.profile else contextlib.nullcontext()
         )
+        with profiling:
+            out = serve_fleet(
+                model, params, tok, n_robots=args.fleet, max_steps=args.steps,
+                channel=NETWORK_PROFILES[args.network],
+                partition_executor=executor, split_robots=split,
+                trigger=args.trigger, defer_hot_admission=args.defer_hot,
+                scan_rounds=args.scan_rounds,
+            )
         if args.assign_cuts:
             # close the loop heterogeneously: per-robot cuts from episode
             # 1's realized fractions, served in episode 2 on a cut frontier
@@ -116,6 +131,7 @@ def main(argv=None):
                     partition_executor=executor2, robot_cuts=robot_cuts,
                     trigger=args.trigger,
                     defer_hot_admission=args.defer_hot,
+                    scan_rounds=args.scan_rounds,
                 )
                 print(f"episode 2 robot cuts: {out['robot_cuts']} "
                       f"({len(out['active_cuts'])} distinct; "
@@ -125,6 +141,12 @@ def main(argv=None):
         tel = out["telemetry"]
         print(f"chunks served: {served} (peak decode batch {out['peak_batch']}, "
               f"{out['decode_rounds']} decode rounds)")
+        if args.profile or args.scan_rounds > 1:
+            print(f"host orchestration: {out['scan_windows']} scan windows, "
+                  f"{out['host_gap_ms']:.2f} ms host gap per window "
+                  f"({args.scan_rounds} rounds/window)")
+        if args.profile:
+            print(f"profiler trace written to {args.profile}")
         print(f"kv pages: high-water {pool.high_water}"
               f"/{pool.pages_in_use + pool.pages_free}")
         if args.trigger == "rapid":

@@ -217,6 +217,7 @@ def serve_fleet(
     robot_cuts: Optional[Dict[int, int]] = None,
     defer_hot_admission: Optional[float] = None,
     num_pages: Optional[int] = None,
+    scan_rounds: int = 1,
     trigger: str = "always",
     trigger_cfg: Optional[TriggerConfig] = None,
     record_streams: bool = False,
@@ -253,6 +254,14 @@ def serve_fleet(
     cut, sliced from ``partition_executor`` via ``with_cut`` — while robots
     absent from the map stay cloud-only.  All cuts still share decode
     rounds and the single page allocator.
+
+    ``scan_rounds=R`` runs the scheduler's device-resident decode windows:
+    each dispatch jits R decode rounds into one ``lax.scan`` (donated KV
+    pool, no per-round host sync) and admission / harvest / cancellation
+    land only at window boundaries.  ``telemetry.scan_windows`` counts the
+    dispatched windows and ``telemetry.host_gap_ms()`` the mean host
+    milliseconds each boundary cost — the orchestration overhead that
+    per-round stepping pays R times over.
 
     ``defer_hot_admission`` (a preempt-rate threshold, e.g. ``0.2``) turns
     on cancellation-aware admission: when a robot fires a mid-chunk preempt
@@ -299,7 +308,7 @@ def serve_fleet(
     sched = ContinuousBatchingScheduler(
         model, params, tokenizer,
         max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
-        num_pages=num_pages,
+        num_pages=num_pages, scan_rounds=scan_rounds,
     )
     if robot_cuts is None:
         robot_cuts = (
@@ -371,7 +380,13 @@ def serve_fleet(
             )
             in_flight.add(r)
             n_off[r] += 1
-        for res in sched.step():
+        prev_windows = sched.windows
+        t0 = time.perf_counter()
+        results = sched.step()
+        step_ms = (time.perf_counter() - t0) * 1e3
+        if sched.windows > prev_windows:
+            telemetry.note_boundary(step_ms)
+        for res in results:
             cached[res.robot_id] = tokenizer.decode_action(
                 res.tokens
             ).reshape(chunk_len, n_joints)
@@ -396,6 +411,8 @@ def serve_fleet(
             f"f_off={telemetry.fleet_offload_fraction():.2f} "
             f"mean_service_rounds={np.mean(wait_rounds) if wait_rounds else 0:.1f} "
             f"decode_rounds={sched.decode_rounds} "
+            f"scan_windows={telemetry.scan_windows} "
+            f"host_gap_ms={telemetry.host_gap_ms():.2f} "
             f"peak_batch={sched.peak_active} "
             f"kv_pages={pool.pages_in_use}/{pool.pages_in_use + pool.pages_free} "
             f"(high-water {pool.high_water}) "
@@ -421,6 +438,8 @@ def serve_fleet(
         "mixed_rounds": sched.mixed_rounds,
         "hetero_rounds": sched.hetero_rounds,
         "decode_rounds": sched.decode_rounds,
+        "scan_windows": telemetry.scan_windows,
+        "host_gap_ms": telemetry.host_gap_ms(),
         "cancelled": sched.cancelled,
         "deferred": sched.deferred,
         "split_robots": sorted(split_set),
@@ -650,6 +669,9 @@ def main(argv=None):
                         "heterogeneous fleet")
     p.add_argument("--k-max", type=int, default=3,
                    help="max distinct concurrently-active cuts")
+    p.add_argument("--scan-rounds", type=int, default=1,
+                   help="decode rounds per jitted scan window (device-"
+                        "resident decode; 1 = per-round stepping)")
     p.add_argument("--defer-hot", type=float, default=None,
                    help="cancellation-aware admission: preempt-rate "
                         "threshold above which a preempting robot's "
@@ -675,6 +697,7 @@ def main(argv=None):
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
             trigger=args.trigger, defer_hot_admission=args.defer_hot,
+            scan_rounds=args.scan_rounds,
         )
         if args.assign_cuts:
             # close the loop: re-assign per-robot cuts from episode 1's
@@ -689,6 +712,7 @@ def main(argv=None):
                     max_steps=args.steps, partition_executor=executor2,
                     robot_cuts=robot_cuts, trigger=args.trigger,
                     defer_hot_admission=args.defer_hot,
+                    scan_rounds=args.scan_rounds,
                 )
         elif args.trigger == "rapid" and args.partition != "none":
             replan_from_telemetry(args.arch, out["telemetry"], args.network)

@@ -693,10 +693,14 @@ class Model:
         unit = []
         for s in self.unit:
             if s[0] == "attn":
-                z = jnp.zeros(
-                    (r, spec.num_pages + 1, spec.page_size, nkv, hd), self.dtype
-                )
-                unit.append({"kp": z, "vp": z})
+                # distinct K/V buffers: donated decode calls alias each
+                # output over its own input, which a shared zeros array
+                # (donated twice) would break
+                shape = (r, spec.num_pages + 1, spec.page_size, nkv, hd)
+                unit.append({
+                    "kp": jnp.zeros(shape, self.dtype),
+                    "vp": jnp.zeros(shape, self.dtype),
+                })
             else:
                 unit.append(self._init_block_cache(s, batch, spec.tokens_per_seq))
         return {

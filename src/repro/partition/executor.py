@@ -38,7 +38,7 @@ from repro.models.layers import embed_lookup, rms_norm
 from repro.models.model import Model
 from repro.partition.planner import interior_net_ms
 from repro.runtime.channel import ChannelConfig
-from repro.runtime.kv_cache import scatter_prompt_into_pool
+from repro.runtime.kv_cache import donating_jit, scatter_prompt_into_pool
 
 
 class PartitionExecutor:
@@ -239,40 +239,91 @@ class PartitionExecutor:
         self._suffix_prefill_j = jax.jit(self._suffix_prefill_impl)
         self._suffix_step_j = jax.jit(self._suffix_step_impl)
 
-    def init_suffix_pools(self, spec, rows: int):
-        """Per-cloud-layer paged caches: attention layers share page pools
-        (+1 trash page), recurrent layers keep dense per-row state."""
+    def init_layer_pool(self, spec):
+        """One attention layer's suffix K/V page pools (+1 trash page each).
+
+        K and V are DISTINCT zero buffers: the fused fleet decode donates
+        the pool pytree, and two leaves aliasing one buffer cannot both be
+        donated.  Pools are owned by the scheduler and keyed by MODEL layer
+        index, so every lane whose cut precedes a layer shares that layer's
+        physical pool (page ids are globally unique — one allocator).
+        """
 
         cfg = self.cfg
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
-        layers = []
-        for s in self.cloud_specs:
-            if s[0] == "attn":
-                z = jnp.zeros(
-                    (spec.num_pages + 1, spec.page_size, nkv, hd),
-                    self.model.dtype,
-                )
-                layers.append({"kp": z, "vp": z})
-            else:
+        shape = (spec.num_pages + 1, spec.page_size, nkv, hd)
+        return {
+            "kp": jnp.zeros(shape, self.model.dtype),
+            "vp": jnp.zeros(shape, self.model.dtype),
+        }
+
+    def init_lane_state(self, spec, rows: int):
+        """Per-row recurrent (non-attention) cloud-suffix state, keyed by
+        MODEL layer index — unlike the shared attention pools, this state is
+        per lane (each cut decodes its own rows through the tail)."""
+
+        out = {}
+        for j, s in enumerate(self.cloud_specs):
+            if s[0] != "attn":
                 c = self.model._init_block_cache(s, rows, spec.tokens_per_seq)
-                layers.append(jax.tree.map(lambda a: a[0], c))
-        return layers
-
-    def pad_suffix_rows(self, layers, pad: int):
-        """Grow the per-row state by ``pad`` rows (pools are shared)."""
-
-        out = []
-        for s, entry in zip(self.cloud_specs, layers):
-            if s[0] == "attn":
-                out.append(entry)
-            else:
-                out.append(jax.tree.map(
-                    lambda a: jnp.concatenate(
-                        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0
-                    ),
-                    entry,
-                ))
+                out[self.cut_layer + j] = jax.tree.map(lambda a: a[0], c)
         return out
+
+    def pad_lane_state(self, state, pad: int):
+        """Grow the per-row recurrent state by ``pad`` rows."""
+
+        return {
+            layer: jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0
+                ),
+                st,
+            )
+            for layer, st in state.items()
+        }
+
+    def init_edge_rows(self, rows: int, seq_len: int):
+        """Row-batched dense edge-prefix caches for the pipelined lane.
+
+        The per-robot batch-1 edge caches (the robots' devices) are merged
+        into rows of these arrays at admission, so a whole window of edge
+        steps can run device-resident inside the fused fleet decode.
+        """
+
+        return self._init_side_caches(self.edge_specs, rows, seq_len)
+
+    def pad_edge_rows(self, caches, pad: int):
+        """Grow the row-batched edge caches by ``pad`` rows."""
+
+        return [
+            jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0
+                ),
+                c,
+            )
+            for c in caches
+        ]
+
+    def merge_edge_rows(self, edge_rows, new_caches, row_idx):
+        """Install batch-1 robot edge caches as rows of the lane's arrays.
+
+        Full-row overwrite, so a recycled row carries no stale KV or
+        recurrent state from its previous occupant (idle rows accumulate
+        clamped garbage writes inside fused windows by design).
+        """
+
+        for caches, ri in zip(new_caches, row_idx):
+            edge_rows = [
+                jax.tree.map(
+                    lambda live, st: live.at[ri].set(
+                        st[0].astype(live.dtype), mode="drop"
+                    ),
+                    lv, st,
+                )
+                for lv, st in zip(edge_rows, caches)
+            ]
+        return edge_rows
 
     def edge_prefill(self, tokens: np.ndarray):
         """Robot-side prompt prefill -> (cut activations [1,S,D], edge caches)."""
@@ -373,6 +424,151 @@ class PartitionExecutor:
         x = rms_norm(x, sp["final_norm"], self.cfg.norm_eps)
         logits = self.model._logits(sp, x)
         return logits[:, -1], new_layers
+
+    # ------------------------------------------------------------------
+    # pipelined fleet decode (device-resident split windows)
+    # ------------------------------------------------------------------
+
+    def build_fleet_decode(self, cuts: Tuple[int, ...], n_steps: int,
+                           token_floor: int):
+        """One jitted window of pipelined split decode over a fleet of lanes.
+
+        ``cuts`` lists the active lanes' cut layers, ascending and unique;
+        the returned fn runs ``n_steps`` (argmax → edge prefix → cloud
+        suffix) iterations in a single ``lax.scan`` with no host sync —
+        the executor-side realization of the planner's pipelined pricing:
+        instead of the serial per-token host ping-pong (sample on host,
+        ship token, edge step, ship activation, suffix step), every leg is
+        one fused device program, so edge compute of token t+1 overlaps
+        the suffix of token t under XLA's scheduler and the channel hops
+        vanish from the critical path.
+
+        Heterogeneous cuts batch their *compatible suffixes*: lanes join a
+        progressively concatenated row batch at their cut layer, so each
+        shared tail layer runs ONCE over the combined rows.  Attention
+        layers read/write the caller's shared per-model-layer page pools
+        (concatenated page tables index one physical pool — page ids are
+        globally unique); recurrent layers concatenate the joined lanes'
+        per-row state and slice it back.
+
+        Signature of the returned fn::
+
+            fn(per_layer, base, pools, lanes, pts, caps)
+              -> (toks, new_lanes, new_pools)
+
+        ``pools``: {model layer idx: {"kp","vp"}} for attn layers >= the
+        shallowest cut.  ``lanes``: per-lane dicts with f32 ``logits``
+        [R_i, V], row-batched ``edge`` caches, ``state`` ({layer: per-row
+        recurrent state}), int32 ``lens`` [R_i].  ``pts``/``caps``: per-lane
+        page tables / capacities.  ``pools`` and ``lanes`` are DONATED —
+        the caller must rebind both to the outputs.  ``toks`` is a per-lane
+        tuple of [R_i, n_steps] int arrays; logits come back f32 (lossless
+        round-trip for f32/bf16 models, so windows chain bit-identically
+        with the serial path's host-side argmax).
+        """
+
+        model, cfg = self.model, self.cfg
+        specs = model.specs
+        num_layers = cfg.num_layers
+        first = cuts[0]
+        n_lanes = len(cuts)
+
+        def fleet(per_layer, base, pools, lanes, pts, caps):
+            def body(carry, _):
+                lanes_c, pools_c = carry
+                xs, toks_out, edges_new = [], [], []
+                for li in range(n_lanes):
+                    lane = lanes_c[li]
+                    ls = lane["logits"]
+                    if token_floor:
+                        ls = ls.at[:, :token_floor].set(-1e9)
+                    tok = jnp.argmax(ls, axis=-1)
+                    toks_out.append(tok)
+                    x = embed_lookup(
+                        tok[:, None], base["embed"], cfg.d_model,
+                        cfg.scale_embeddings,
+                    ).astype(model.dtype)
+                    ecs = []
+                    for j in range(cuts[li]):
+                        x, nc = model._block_step(
+                            specs[j], per_layer[j], x, lane["edge"][j],
+                            lane["lens"],
+                        )
+                        ecs.append(nc)
+                    edges_new.append(ecs)
+                    xs.append(x)
+                # progressive tail: lane li joins the concatenated row
+                # batch at layer cuts[li]; offsets slice its rows back out
+                new_pools = {}
+                states_new = [dict() for _ in range(n_lanes)]
+                x_cat = pt_cat = len_cat = cap_cat = None
+                offs = []
+                joined = 0
+                for layer in range(first, num_layers):
+                    while joined < n_lanes and cuts[joined] == layer:
+                        lane = lanes_c[joined]
+                        if x_cat is None:
+                            offs.append(0)
+                            x_cat, pt_cat = xs[joined], pts[joined]
+                            len_cat, cap_cat = lane["lens"], caps[joined]
+                        else:
+                            offs.append(x_cat.shape[0])
+                            x_cat = jnp.concatenate([x_cat, xs[joined]], 0)
+                            pt_cat = jnp.concatenate([pt_cat, pts[joined]], 0)
+                            len_cat = jnp.concatenate([len_cat, lane["lens"]], 0)
+                            cap_cat = jnp.concatenate([cap_cat, caps[joined]], 0)
+                        joined += 1
+                    if specs[layer][0] == "attn":
+                        x_cat, nc = model._block_step(
+                            specs[layer], per_layer[layer], x_cat,
+                            pools_c[layer], len_cat,
+                            paged=(pt_cat, cap_cat),
+                        )
+                        new_pools[layer] = {"kp": nc["kp"], "vp": nc["vp"]}
+                    else:
+                        st_cat = jax.tree.map(
+                            lambda *a: jnp.concatenate(a, 0) if len(a) > 1 else a[0],
+                            *(lanes_c[k]["state"][layer] for k in range(joined)),
+                        )
+                        x_cat, nc = model._block_step(
+                            specs[layer], per_layer[layer], x_cat, st_cat,
+                            len_cat,
+                        )
+                        for k in range(joined):
+                            o, r = offs[k], lanes_c[k]["lens"].shape[0]
+                            states_new[k][layer] = jax.tree.map(
+                                lambda a, o=o, r=r: a[o:o + r], nc
+                            )
+                while joined < n_lanes:
+                    # cut == num_layers: empty suffix — the edge output IS
+                    # the final hidden; the lane joins after the last layer
+                    if x_cat is None:
+                        offs.append(0)
+                        x_cat = xs[joined]
+                    else:
+                        offs.append(x_cat.shape[0])
+                        x_cat = jnp.concatenate([x_cat, xs[joined]], 0)
+                    joined += 1
+                x_cat = rms_norm(x_cat, base["final_norm"], cfg.norm_eps)
+                logits_cat = model._logits(base, x_cat)[:, 0]
+                new_lanes = []
+                for li in range(n_lanes):
+                    o, r = offs[li], lanes_c[li]["lens"].shape[0]
+                    new_lanes.append({
+                        "logits": logits_cat[o:o + r].astype(jnp.float32),
+                        "edge": edges_new[li],
+                        "state": states_new[li],
+                        "lens": lanes_c[li]["lens"] + 1,
+                    })
+                return (tuple(new_lanes), new_pools), tuple(toks_out)
+
+            (lanes, pools), toks = jax.lax.scan(
+                body, (lanes, pools), None, length=n_steps
+            )
+            toks = tuple(jnp.swapaxes(t, 0, 1) for t in toks)
+            return toks, lanes, pools
+
+        return donating_jit(fleet, donate_argnums=(2, 3))
 
     # ------------------------------------------------------------------
     # channel telemetry

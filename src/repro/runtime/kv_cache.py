@@ -30,6 +30,25 @@ class OutOfPages(RuntimeError):
     """The pool has no free pages; the scheduler must defer admission."""
 
 
+def donating_jit(fn, donate_argnums=(), static_argnums=()):
+    """``jax.jit`` with buffer donation for in-place pool updates.
+
+    The serving hot loops (decode rounds, admission merges, suffix steps)
+    thread multi-hundred-MB page pools through jitted calls; donating the
+    pool argument lets XLA alias the output over the input instead of
+    allocating a fresh pool every round.  Donation *invalidates* the input
+    buffer, so every donated call site must rebind its reference to the
+    returned value before the next use — the scheduler's scan-window
+    discipline (admission/release only at round boundaries, cancels deferred
+    to the boundary) exists precisely so no host-side reference outlives the
+    donation.  On CPU the runtime still deletes the input (same discipline
+    applies) but may copy rather than alias; on TPU/GPU the update is
+    genuinely in place.
+    """
+
+    return jax.jit(fn, donate_argnums=donate_argnums, static_argnums=static_argnums)
+
+
 @dataclass(frozen=True)
 class PagedSpec:
     """Static page-pool geometry for the model's paged decode mode.
@@ -84,7 +103,7 @@ class PageAllocator:
             self._free.append(p)
 
 
-@partial(jax.jit, donate_argnums=(0,))
+@partial(donating_jit, donate_argnums=(0,))
 def _scatter_tokens(pool: jax.Array, slots: jax.Array, vals: jax.Array) -> jax.Array:
     """pool [P*page, KV, D]; slots [n] flat token slots; vals [n, KV, D]."""
 

@@ -239,6 +239,12 @@ class FleetTelemetry:
     replay_stream: List[np.ndarray] = field(default_factory=list)
     preempt_stream: List[np.ndarray] = field(default_factory=list)
     slot_stream: List[np.ndarray] = field(default_factory=list)
+    # round-boundary accounting (device-resident decode): one entry per
+    # dispatched scan window, recording the HOST milliseconds the serving
+    # loop spent orchestrating that boundary (admit + dispatch + harvest) —
+    # the per-round overhead the multi-round scan amortizes over R rounds
+    scan_windows: int = 0
+    boundary_ms: List[float] = field(default_factory=list)
 
     def __post_init__(self):
         z = lambda: np.zeros(self.n_robots, np.int64)
@@ -263,6 +269,17 @@ class FleetTelemetry:
 
     def note_cancel(self, robot_id: int) -> None:
         self.cancels[robot_id] += 1
+
+    def note_boundary(self, host_ms: float) -> None:
+        """One scan-window boundary crossed; ``host_ms`` is its host gap."""
+
+        self.scan_windows += 1
+        self.boundary_ms.append(float(host_ms))
+
+    def host_gap_ms(self) -> float:
+        """Mean host milliseconds per window boundary (0 if none seen)."""
+
+        return float(np.mean(self.boundary_ms)) if self.boundary_ms else 0.0
 
     def note_completion(self, robot_id: int) -> None:
         self.completions[robot_id] += 1
@@ -312,4 +329,6 @@ class FleetTelemetry:
                 round(float(f), 4) for f in self.offload_fractions()
             ],
             "fleet_offload_fraction": round(self.fleet_offload_fraction(), 4),
+            "scan_windows": self.scan_windows,
+            "host_gap_ms": round(self.host_gap_ms(), 3),
         }

@@ -15,12 +15,32 @@ over one shared KV page pool (``Model``'s paged decode mode), and
     than rows, the row arrays double — at most log2 jitted decode variants;
   * **decode rounds** advance every active row by ``decode_block`` greedy
     action tokens through one fused ``Model.decode_chunk`` (paged mode —
-    attention reads/writes go through ``ops.paged_decode_attention``); the
-    only host sync is the token read-back per round;
+    attention reads/writes go through ``ops.paged_decode_attention``);
   * **page accounting** is a single ``PageAllocator`` shared by cloud-only
     sequences *and* (when a ``PartitionExecutor`` is attached) the cloud
     suffixes of partitioned robots, so both kinds of robot share the same
     decode rounds and the same admission currency: free pages.
+
+**Scan windows — the device-resident steady state.**  ``scan_rounds=R``
+lifts the per-round host round-trip out of the hot loop: one ``step()``
+call per window dispatches a single jitted ``lax.scan`` over R decode
+rounds (the logits rows and the paged pools are *donated*, so XLA updates
+the KV pool in place), the next R-1 calls return immediately, and the
+window-closing call performs the window's only host sync, harvesting every
+finished chunk at once.  Admission, completion, and page release happen
+only at these boundaries; a ``cancel`` landing mid-window marks the
+sequence dead and the boundary frees its pages — never while a donated
+in-flight buffer might still write them.  ``scan_rounds=1`` degenerates to
+the classic one-round-per-call loop (dispatch + harvest in the same call).
+
+Split lanes come in two flavours: the **serial** lane ping-pongs every token
+through the host (the deployment-faithful per-robot loop), while the
+default **pipelined** lane runs (argmax → edge prefix → merged suffix) for
+a whole window inside one jitted scan — ascending-cut lanes join a
+progressively concatenated row batch at their cut layer, so shared tail
+layers run once over the combined rows and every lane's suffix KV lives in
+one scheduler-owned pool per model layer (pages are globally unique, so
+cross-lane batching needs no per-lane pool copies).
 
 Every ``ChunkResult`` carries a pool-utilization snapshot (pages in use /
 free / high-water) so serving telemetry sees KV pressure directly.
@@ -38,7 +58,7 @@ import numpy as np
 
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
-from repro.runtime.kv_cache import PageAllocator, PagedSpec
+from repro.runtime.kv_cache import PageAllocator, PagedSpec, donating_jit
 
 DEFAULT_PAGE_SIZE = 16
 
@@ -93,6 +113,21 @@ class _Sequence:
     request: ChunkRequest
     admitted_round: int
     tokens: List[int] = field(default_factory=list)
+    # cancelled while a scan window was in flight: the donated decode still
+    # writes this row's pages, so they are freed at the boundary, not here
+    dead: bool = False
+
+
+@dataclass
+class _ScanWindow:
+    """One dispatched multi-round decode whose results await harvest."""
+
+    steps_left: int
+    n_steps: int                         # total tokens decoded per row
+    toks: Optional[jax.Array] = None     # cloud tokens [rows, n_steps]
+    seqs: List[_Sequence] = field(default_factory=list)
+    lane_toks: Dict[int, object] = field(default_factory=dict)
+    lane_seqs: Dict[int, list] = field(default_factory=dict)
 
 
 class ContinuousBatchingScheduler:
@@ -111,6 +146,7 @@ class ContinuousBatchingScheduler:
         max_block: Optional[int] = None,
         page_size: int = DEFAULT_PAGE_SIZE,
         num_pages: Optional[int] = None,
+        scan_rounds: int = 1,
     ):
         if model.cfg.encoder_decoder:
             raise NotImplementedError("continuous batching targets decoder-only VLAs")
@@ -129,6 +165,8 @@ class ContinuousBatchingScheduler:
         self.adaptive_block = adaptive_block
         self.max_block = min(max_block or 4 * self.decode_block, self.total_tokens)
         self.prompt_len = 2 * n_joints
+        # R decode rounds per host dispatch; 1 == per-round path
+        self.scan_rounds = max(int(scan_rounds), 1)
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0        # rounds where both kinds decoded
@@ -136,6 +174,7 @@ class ContinuousBatchingScheduler:
         self.decode_rounds = 0       # rounds where any sequence decoded
         self.cancelled = 0           # sequences cancelled mid-flight
         self.deferred = 0            # submissions admitted late on purpose
+        self.windows = 0             # dispatched scan windows
         self.last_round_kinds: Tuple[int, int] = (0, 0)  # (cloud, split)
 
         # KV page accounting: a request needs prompt + chunk tokens resident
@@ -153,15 +192,19 @@ class ContinuousBatchingScheduler:
         self._queue: Deque[ChunkRequest] = deque()
         self._seqs: Dict[int, _Sequence] = {}    # row -> sequence
         self._free_rows: List[int] = list(range(max_slots))
-        # cut-keyed split-lane registry: one lane (sliced params + suffix
-        # pool group) per DISTINCT active cut, all drawing pages from the
-        # one allocator above
+        # cut-keyed split-lane registry: one lane per DISTINCT active cut,
+        # all drawing pages from the one allocator above
         self._lanes: Dict[int, "_SplitLane"] = {}
         self._order = 0
+        self._window: Optional[_ScanWindow] = None
 
         self._token_floor = tokenizer.action_base
         self._admit_fns = {}
         self._decode_fns = {}
+        # pipelined split serving: shared per-MODEL-layer suffix page pools
+        # and the fused per-(cuts, n_steps) decode fns over them
+        self._suffix_pools: Optional[Dict[int, dict]] = None
+        self._fleet_fns = {}
 
         # live batch state: logits rows + the paged cache (shared pools,
         # per-row page table / length / capacity — zeros mean inactive)
@@ -178,7 +221,7 @@ class ContinuousBatchingScheduler:
     # request interface
     # ------------------------------------------------------------------
 
-    def attach_partition(self, executor, rows: int = 2) -> None:
+    def attach_partition(self, executor, rows: int = 2, pipelined: bool = True) -> None:
         """Serve partitioned robots' cloud suffixes in the same rounds.
 
         ``executor`` is a ``PartitionExecutor`` over the same model family;
@@ -188,12 +231,20 @@ class ContinuousBatchingScheduler:
         fleet: each call registers a lane keyed by ``executor.cut_layer``,
         and robots on different cuts still share decode rounds and the one
         page allocator.
+
+        ``pipelined`` (default) decodes the lane inside one fused jitted
+        scan per window — edge stage of token t+1 overlaps the suffix of
+        token t, and compatible lanes batch their suffixes into one call.
+        ``pipelined=False`` keeps the per-token host ping-pong (the serial
+        reference the pipelined path is tested bit-identical against).
+        Heterogeneous pipelined lanes must share parameter slices — derive
+        siblings with ``executor.with_cut``.
         """
 
         cut = executor.cut_layer
         if cut in self._lanes:
             raise ValueError(f"cut {cut} already has a lane attached")
-        self._lanes[cut] = _SplitLane(self, executor, rows)
+        self._lanes[cut] = _SplitLane(self, executor, rows, pipelined)
 
     def _lane_for(self, cut: Optional[int]) -> "_SplitLane":
         if not self._lanes:
@@ -243,12 +294,15 @@ class ContinuousBatchingScheduler:
         """Cancel ``robot_id``'s queued or in-flight chunk request.
 
         The redundancy-aware fleet loop calls this when a contact-phase
-        trigger fires while a previous request is still decoding: the stale
-        sequence's pool pages (and split-lane row, for partitioned robots)
-        are freed mid-flight so the fresh observation can be admitted
-        immediately.  Returns ``False`` when nothing was in flight (e.g.
-        the preemption raced the chunk's final decode step) — the pages
-        were already released by completion, so nothing is double-freed.
+        trigger fires while a previous request is still decoding.  Queued
+        requests are plain queue removals.  An in-flight sequence is freed
+        immediately — *unless* it belongs to the currently dispatched scan
+        window: the donated in-flight scan still writes its pages and row,
+        so the sequence is only MARKED dead here and the window boundary
+        releases it (without emitting a result).  Freeing early would let
+        the next admission reuse pages the scan is still writing.  Returns
+        ``False`` when nothing was in flight (e.g. the preemption raced the
+        chunk's final decode round) — nothing is double-freed.
         """
 
         for lane_queue in (self._queue, *(l.queue for l in self._lanes.values())):
@@ -257,15 +311,24 @@ class ContinuousBatchingScheduler:
                     lane_queue.remove(req)
                     self.cancelled += 1
                     return True
+        w = self._window
         for seq in self._seqs.values():
-            if seq.robot_id == robot_id:
-                self._release(seq)
+            if seq.robot_id == robot_id and not seq.dead:
+                if w is not None and any(s is seq for s in w.seqs):
+                    seq.dead = True
+                else:
+                    self._release(seq)
                 self.cancelled += 1
                 return True
         for lane in self._lanes.values():
             for seq in lane.seqs.values():
-                if seq.robot_id == robot_id:
-                    lane.release(seq)
+                if seq.robot_id == robot_id and not seq.dead:
+                    if w is not None and any(
+                        s is seq for s in w.lane_seqs.get(lane.cut, ())
+                    ):
+                        seq.dead = True
+                    else:
+                        lane.release(seq)
                     self.cancelled += 1
                     return True
         return False
@@ -298,11 +361,13 @@ class ContinuousBatchingScheduler:
         self._seqs.clear()
         self._free_rows = list(range(self.rows))
         self.allocator = PageAllocator(self.allocator.num_pages)
+        self._window = None
         self._logits = jnp.zeros_like(self._logits)
         self._pcache["len"] = jnp.zeros((self.rows,), jnp.int32)
         self._pcache["cap"] = jnp.zeros((self.rows,), jnp.int32)
         for lane in self._lanes.values():
             lane.reset()
+        self._suffix_pools = None
         self.round = 0
         self.peak_active = 0
         self.mixed_rounds = 0
@@ -310,6 +375,7 @@ class ContinuousBatchingScheduler:
         self.decode_rounds = 0
         self.cancelled = 0
         self.deferred = 0
+        self.windows = 0
         self.last_round_kinds = (0, 0)
 
     # ------------------------------------------------------------------
@@ -373,7 +439,11 @@ class ContinuousBatchingScheduler:
         return self._free_rows.pop(0)
 
     def _admit_for(self, n: int):
-        """Jitted admission (batched prefill + paged merge) per (n, rows)."""
+        """Jitted admission (batched prefill + paged merge) per (n, rows).
+
+        The live pool/logits buffers are donated — the merge updates them
+        in place; the caller rebinds both references to the outputs.
+        """
 
         key = (n, self.rows)
         fn = self._admit_fns.get(key)
@@ -390,26 +460,97 @@ class ContinuousBatchingScheduler:
                 )
                 return pcache, logits_live
 
-            fn = jax.jit(admit)
+            fn = donating_jit(admit, donate_argnums=(1, 2))
             self._admit_fns[key] = fn
         return fn
 
-    def _decode_for(self, n_steps: int):
-        """Jitted decode round per (block size, rows)."""
+    def _decode_for(self, n_steps: int, rounds: int):
+        """Jitted decode window per (block, rounds, rows): a ``lax.scan``
+        over ``rounds`` chained ``decode_chunk`` calls — identical, token
+        for token, to ``rounds`` separate per-round dispatches, but with a
+        single host round-trip and the logits/pool buffers donated so the
+        paged KV pool updates in place."""
 
-        key = (n_steps, self.rows)
+        key = (n_steps, rounds, self.rows)
         fn = self._decode_fns.get(key)
         if fn is None:
-            def decode_rounds(params, logits_rows, pcache):
-                toks, logits, pcache = self.model.decode_chunk(
-                    params, logits_rows[:, None], pcache, n_steps,
-                    self._token_floor,
-                )
-                return toks, logits[:, -1], pcache
+            def window(params, logits_rows, pcache):
+                def body(carry, _):
+                    lg, pc = carry
+                    toks, lg, pc = self.model.decode_chunk(
+                        params, lg[:, None], pc, n_steps, self._token_floor
+                    )
+                    return (lg[:, -1], pc), toks
 
-            fn = jax.jit(decode_rounds)
+                (lg, pc), toks = jax.lax.scan(
+                    body, (logits_rows, pcache), None, length=rounds
+                )
+                toks = jnp.swapaxes(toks, 0, 1).reshape(
+                    logits_rows.shape[0], rounds * n_steps
+                )
+                return toks, lg, pc
+
+            fn = donating_jit(window, donate_argnums=(1, 2))
             self._decode_fns[key] = fn
         return fn
+
+    def _ensure_suffix_pools(self, ex) -> None:
+        """Shared cut-suffix K/V page pools, keyed by MODEL layer index.
+
+        Every lane whose cut is <= a layer writes that layer's suffix KV
+        into the same physical pool — page ids are globally unique (one
+        allocator), so heterogeneous-cut lanes batch their compatible
+        suffixes without per-lane pool copies.  Dropped (with the lane row
+        arrays) whenever no lane holds buffers.
+        """
+
+        if self._suffix_pools is None:
+            self._suffix_pools = {}
+        for layer in range(ex.cut_layer, self.model.cfg.num_layers):
+            if self.model.specs[layer][0] == "attn" and layer not in self._suffix_pools:
+                self._suffix_pools[layer] = ex.init_layer_pool(self.paged_spec)
+
+    def _split_fused_step(self, lanes: List["_SplitLane"], n_steps: int) -> None:
+        """Dispatch one fused jitted decode over every active pipelined lane.
+
+        Ascending-cut lanes join a progressively concatenated row batch at
+        their cut layer, so the shared tail layers run once over the
+        combined rows.  The shared pools and every lane's carries (edge
+        caches, recurrent state, logits) are donated and rebound here; the
+        per-lane tokens/logits stay on device until ``harvest``.
+        """
+
+        lanes = sorted(lanes, key=lambda l: l.cut)
+        ex = lanes[0].ex
+        cuts = tuple(l.cut for l in lanes)
+        key = (cuts, n_steps)
+        fn = self._fleet_fns.get(key)
+        if fn is None:
+            fn = ex.build_fleet_decode(cuts, n_steps, self._token_floor)
+            self._fleet_fns[key] = fn
+        # only the layers the fused call returns may be donated — an entry
+        # for a shallower (currently idle) cut must stay alive
+        pools = {l: p for l, p in self._suffix_pools.items() if l >= cuts[0]}
+        lane_in = tuple(
+            {
+                "logits": jnp.asarray(l._logits, jnp.float32),
+                "edge": l._edge,
+                "state": l._state,
+                "lens": jnp.asarray(l._len),
+            }
+            for l in lanes
+        )
+        pts = tuple(jnp.asarray(l._pt) for l in lanes)
+        caps = tuple(jnp.asarray(l._cap) for l in lanes)
+        toks, new_lanes, new_pools = fn(
+            ex._per_layer, ex._base, pools, lane_in, pts, caps
+        )
+        self._suffix_pools = {**self._suffix_pools, **new_pools}
+        for lane, nl, tk in zip(lanes, new_lanes, toks):
+            lane._edge = nl["edge"]
+            lane._state = nl["state"]
+            lane._pending_logits = nl["logits"]
+            lane._pending_toks = tk
 
     def _reserve(self, req: ChunkRequest) -> _Sequence:
         pages = self.allocator.alloc(self.pages_per_req)
@@ -483,26 +624,79 @@ class ContinuousBatchingScheduler:
         self._pcache["cap"] = self._pcache["cap"].at[seq.row].set(0)
 
     def step(self) -> List[ChunkResult]:
-        """Admit pending requests, run one decode round, emit finished chunks."""
+        """Advance one decode round.
 
+        ``scan_rounds == 1``: every call admits, runs one jitted round, and
+        harvests (the classic per-round loop).  ``scan_rounds == R > 1``:
+        one call per window admits and dispatches the async R-round scan,
+        the next R-2 calls return [] without touching the device, and the
+        R-th call syncs once and emits everything the window finished.
+        """
+
+        if self._window is not None:
+            self.round += 1
+            self._window.steps_left -= 1
+            if self._window.steps_left <= 0:
+                return self._close_window()
+            return []
         self.round += 1
         self._try_admit()
         n_cloud = len(self._seqs)
         n_split = sum(len(l.seqs) for l in self._lanes.values())
         self.last_round_kinds = (n_cloud, n_split)
-        self.mixed_rounds += n_cloud > 0 and n_split > 0
-        self.hetero_rounds += len(self.active_cuts) >= 2
-        self.decode_rounds += n_cloud > 0 or n_split > 0
+        if n_cloud + n_split == 0:
+            return []
+        rounds = self.scan_rounds
+        self.mixed_rounds += rounds * (n_cloud > 0 and n_split > 0)
+        self.hetero_rounds += rounds * (len(self.active_cuts) >= 2)
+        self.decode_rounds += rounds
+        self.windows += 1
         self.peak_active = max(self.peak_active, n_cloud + n_split)
-        done: List[ChunkResult] = []
         block = self._block_for_depth(self.n_pending)
+        done: List[ChunkResult] = []
+        # serial (non-pipelined) lanes ping-pong through the host, so their
+        # window runs to completion at dispatch and rides this call's return
+        for lane in [l for l in self._lanes.values() if l.seqs and not l.pipelined]:
+            for _ in range(rounds):
+                if lane.seqs:
+                    done.extend(lane.step(block))
+        w = _ScanWindow(steps_left=rounds, n_steps=rounds * block)
         if n_cloud:
-            toks, self._logits, self._pcache = self._decode_for(block)(
+            w.toks, self._logits, self._pcache = self._decode_for(block, rounds)(
                 self.params, self._logits, self._pcache
             )
-            toks = np.asarray(toks)  # one sync per round
-            for seq in list(self._seqs.values()):
-                take = min(seq.remaining, block)
+            w.seqs = list(self._seqs.values())
+        planes = [l for l in self._lanes.values() if l.seqs and l.pipelined]
+        if planes:
+            self._split_fused_step(planes, rounds * block)
+            for lane in planes:
+                w.lane_seqs[lane.cut] = list(lane.seqs.values())
+                w.lane_toks[lane.cut] = lane._pending_toks
+                lane._pending_toks = None
+        self._window = w
+        self._window.steps_left -= 1
+        if self._window.steps_left <= 0:
+            done.extend(self._close_window())
+        return done
+
+    def _close_window(self) -> List[ChunkResult]:
+        """Window boundary: the one host sync, then harvest + releases.
+
+        Sequences past their chunk kept decoding inside the scan (their
+        writes land in their own spare page slots, then the trash page);
+        only the first ``remaining`` tokens are taken, so the harvested
+        stream is bit-identical to the per-round path.  Dead (cancelled
+        mid-window) sequences release their pages here, emitting nothing.
+        """
+
+        w, self._window = self._window, None
+        done: List[ChunkResult] = []
+        if w.toks is not None:
+            toks = np.asarray(w.toks)
+            for seq in w.seqs:
+                if seq.dead:
+                    continue
+                take = min(seq.remaining, toks.shape[1])
                 seq.tokens.extend(int(t) for t in toks[seq.row, :take])
                 seq.remaining -= take
                 if seq.remaining == 0:
@@ -516,9 +710,11 @@ class ContinuousBatchingScheduler:
                         kind="cloud",
                         pool=self.pool_stats(),
                     ))
-        for lane in self._lanes.values():
-            if lane.seqs:
-                done.extend(lane.step(block))
+            for seq in w.seqs:
+                if seq.dead and self._seqs.get(seq.row) is seq:
+                    self._release(seq)
+        for cut, seqs in w.lane_seqs.items():
+            done.extend(self._lanes[cut].harvest(seqs, w.lane_toks[cut], self.round))
         return done
 
     def drain(self, max_rounds: int = 10_000) -> List[ChunkResult]:
@@ -548,20 +744,36 @@ class _SplitSeq:
     admitted_round: int
     edge_cache: object       # dense per-robot edge-prefix caches (batch 1)
     tokens: List[int] = field(default_factory=list)
+    dead: bool = False       # cancelled while its scan window was in flight
 
 
 class _SplitLane:
     """Batched cloud-suffix decode for partitioned robots.
 
-    Each decode round ping-pongs ``block`` times: every active robot's edge
-    prefix embeds its last sampled token (per-robot batch-1 step — each
-    robot owns its own edge device), the cut activations are stacked into
-    one ragged batch, and the executor's paged suffix advances them in a
-    single jitted call.  Suffix KV pages come from the *scheduler's*
-    allocator, so admission of split and cloud-only work is fungible.
+    Two decode modes share admission, rows and page accounting:
+
+      * **serial** (``pipelined=False``): each round ping-pongs ``block``
+        times through the host — every active robot's edge prefix embeds
+        its last sampled token (per-robot batch-1 step), the cut
+        activations are stacked, and the executor's paged suffix advances
+        them in one jitted call.  Deployment-faithful, and the numeric
+        reference for the fused path.
+      * **pipelined** (default): the lane's edge prefixes are row-batched
+        device caches, and a whole window of (argmax → edge prefix →
+        merged suffix) steps runs inside ONE jitted scan
+        (``PartitionExecutor.build_fleet_decode``) with no host sync —
+        realizing the planner's pipelined ``max(edge, cloud)`` pricing,
+        and batching compatible suffixes across heterogeneous cuts.
+
+    Suffix attention KV lives in the SCHEDULER's shared per-model-layer
+    pools (``_ensure_suffix_pools``); the lane holds only per-row state:
+    recurrent block state, page table, lengths, logits.  Pages come from
+    the scheduler's allocator, so admission of split and cloud-only work
+    is fungible.
     """
 
-    def __init__(self, sched: ContinuousBatchingScheduler, executor, rows: int):
+    def __init__(self, sched: ContinuousBatchingScheduler, executor, rows: int,
+                 pipelined: bool = True):
         from repro.partition.executor import PartitionExecutor
 
         assert isinstance(executor, PartitionExecutor)
@@ -569,26 +781,35 @@ class _SplitLane:
         self.ex = executor
         self.cut = executor.cut_layer
         self.rows = rows
+        self.pipelined = pipelined
         self.queue: Deque[ChunkRequest] = deque()
         self.seqs: Dict[int, _SplitSeq] = {}
         self._free_rows: List[int] = list(range(rows))
         # the suffix pools share the scheduler's pool geometry (and pages)
         self.ex.build_suffix_fns(sched.paged_spec, extra=sched.total_tokens)
-        # row arrays (suffix pools + per-row state) are allocated lazily and
-        # DROPPED whenever the lane empties — with a frontier of concurrent
-        # lanes, an idle cut must not pin a full page-pool-sized KV copy
-        self._layers = None
+        # row arrays (edge caches + recurrent state + bookkeeping) are
+        # allocated lazily and DROPPED whenever the lane empties — with a
+        # frontier of concurrent lanes, an idle cut must not pin row state
+        self._state = None       # {model layer idx: per-row recurrent state}
+        self._edge = None        # row-batched edge caches (pipelined mode)
         self._pt = self._len = self._cap = self._logits = None
+        self._pending_logits = None   # device logits of an in-flight window
+        self._pending_toks = None
 
     @property
     def has_buffers(self) -> bool:
-        return self._layers is not None
+        return self._pt is not None
 
     def _ensure_buffers(self) -> None:
-        if self._layers is not None:
+        if self._pt is not None:
             return
         sched = self.sched
-        self._layers = self.ex.init_suffix_pools(sched.paged_spec, self.rows)
+        sched._ensure_suffix_pools(self.ex)
+        self._state = self.ex.init_lane_state(sched.paged_spec, self.rows)
+        if self.pipelined:
+            self._edge = self.ex.init_edge_rows(
+                self.rows, sched.prompt_len + sched.total_tokens
+            )
         # host-side row bookkeeping shipped into every suffix call
         self._pt = np.zeros((self.rows, sched.pages_per_req), np.int32)
         self._len = np.zeros((self.rows,), np.int32)
@@ -597,10 +818,18 @@ class _SplitLane:
 
     def _drop_buffers(self) -> None:
         """Free the lane's device row arrays (nothing in flight refers to
-        them); ``_ensure_buffers`` rebuilds zeros on the next admission."""
+        them); ``_ensure_buffers`` rebuilds zeros on the next admission.
+        The scheduler's shared suffix pools go too once NO lane holds
+        buffers — an idle fleet pins no split KV at all."""
 
-        self._layers = None
+        self._state = self._edge = None
         self._pt = self._len = self._cap = self._logits = None
+        self._pending_logits = self._pending_toks = None
+        sched = self.sched
+        if sched._suffix_pools is not None and not any(
+            l.has_buffers for l in sched._lanes.values()
+        ):
+            sched._suffix_pools = None
 
     def reset(self) -> None:
         self.queue.clear()
@@ -611,8 +840,10 @@ class _SplitLane:
     def _grow_rows(self) -> None:
         old, new = self.rows, self.rows * 2
         pad = new - old
-        if self._layers is not None:
-            self._layers = self.ex.pad_suffix_rows(self._layers, pad)
+        if self._pt is not None:
+            self._state = self.ex.pad_lane_state(self._state, pad)
+            if self._edge is not None:
+                self._edge = self.ex.pad_edge_rows(self._edge, pad)
             self._pt = np.concatenate(
                 [self._pt, np.zeros((pad, self.sched.pages_per_req), np.int32)]
             )
@@ -664,6 +895,28 @@ class _SplitLane:
         self.seqs[row] = seq
         return seq
 
+    def _layers_view(self) -> list:
+        """Assemble the executor's per-cloud-layer list fresh for a serial
+        call: attention layers read the scheduler's SHARED pools, the rest
+        this lane's per-row state."""
+
+        pools = self.sched._suffix_pools
+        out = []
+        for j, s in enumerate(self.ex.cloud_specs):
+            layer = self.cut + j
+            out.append(pools[layer] if s[0] == "attn" else self._state[layer])
+        return out
+
+    def _writeback(self, layers: list) -> None:
+        pools = dict(self.sched._suffix_pools)
+        for j, s in enumerate(self.ex.cloud_specs):
+            layer = self.cut + j
+            if s[0] == "attn":
+                pools[layer] = {"kp": layers[j]["kp"], "vp": layers[j]["vp"]}
+            else:
+                self._state[layer] = layers[j]
+        self.sched._suffix_pools = pools
+
     def flush(self, new: List[_SplitSeq]) -> None:
         """Batched cloud-suffix prefill over the reserved admissions."""
 
@@ -685,15 +938,29 @@ class _SplitLane:
             self._pt[seq.row] = seq.pages
             self._len[seq.row] = s
             self._cap[seq.row] = sched.cap_tokens
-        self._layers, logits_new = self.ex.suffix_prefill(
-            x, self._layers, pt_new, row_idx, lens, caps
+        layers, logits_new = self.ex.suffix_prefill(
+            x, self._layers_view(), pt_new, row_idx, lens, caps
         )
+        self._writeback(layers)
         logits_new = np.asarray(logits_new, np.float32)
         for i, seq in enumerate(new):
             self._logits[seq.row] = logits_new[i]
             del seq._x_cut
+        if self.pipelined:
+            # the robots' batch-1 edge prefill caches become rows of the
+            # lane's device-resident edge state (full-row overwrite, so a
+            # recycled row carries no stale KV)
+            self._edge = self.ex.merge_edge_rows(
+                self._edge,
+                [seq.edge_cache for seq in new],
+                [seq.row for seq in new],
+            )
+            for seq in new:
+                seq.edge_cache = None
 
     def step(self, block: int) -> List[ChunkResult]:
+        """Serial mode: one round of per-token host ping-pong decode."""
+
         sched = self.sched
         done: List[ChunkResult] = []
         floor = sched._token_floor
@@ -717,9 +984,10 @@ class _SplitLane:
                 )
                 xs[seq.row] = np.asarray(x_cut[:, 0], np.float32)
                 seq.length += 1
-            logits, self._layers = self.ex.suffix_step(
-                xs, self._layers, self._pt, self._len, self._cap
+            logits, layers = self.ex.suffix_step(
+                xs, self._layers_view(), self._pt, self._len, self._cap
             )
+            self._writeback(layers)
             logits = np.asarray(logits, np.float32)
             for seq in active:
                 self._logits[seq.row] = logits[seq.row]
@@ -737,4 +1005,41 @@ class _SplitLane:
                         pool=sched.pool_stats(),
                         cut=self.cut,
                     ))
+        return done
+
+    def harvest(self, seqs: List[_SplitSeq], toks, completed_round: int
+                ) -> List[ChunkResult]:
+        """Pipelined mode, window boundary: sync the fused scan's outputs,
+        take each live sequence's tokens (over-decoded tail discarded),
+        release completions and dead (mid-window-cancelled) rows."""
+
+        sched = self.sched
+        done: List[ChunkResult] = []
+        self._logits = np.asarray(self._pending_logits, np.float32)
+        self._pending_logits = None
+        toks = np.asarray(toks)
+        n_steps = toks.shape[1]
+        live = [s for s in seqs if not s.dead]
+        if live:
+            self._len[[s.row for s in live]] += n_steps
+        for seq in live:
+            take = min(seq.remaining, n_steps)
+            seq.tokens.extend(int(t) for t in toks[seq.row, :take])
+            seq.remaining -= take
+            seq.length += take
+            if seq.remaining == 0:
+                self.release(seq)
+                done.append(ChunkResult(
+                    robot_id=seq.robot_id,
+                    tokens=np.asarray(seq.tokens, np.int64),
+                    submitted_round=seq.request.submitted_round,
+                    admitted_round=seq.admitted_round,
+                    completed_round=completed_round,
+                    kind="split",
+                    pool=sched.pool_stats(),
+                    cut=self.cut,
+                ))
+        for seq in seqs:
+            if seq.dead and self.seqs.get(seq.row) is seq:
+                self.release(seq)
         return done

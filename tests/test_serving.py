@@ -785,3 +785,173 @@ def test_cooldown_mask_matches_reference_loop():
                 c = max(c - 1, 0)
         got = np.asarray(_cooldown_mask(jnp.asarray(trig), jnp.int32(cooldown)))
         np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# device-resident decode: multi-round scan windows
+# ---------------------------------------------------------------------------
+
+
+def test_scan_window_bit_identical_cloud(stack):
+    """scan_rounds=R must emit the exact per-round-path chunks (pinned via
+    the isolated CloudPolicy, which the R=1 path matches bit-for-bit)."""
+
+    _, model, params, tok = stack
+    policy = CloudPolicy(model, params, tok, fused=True)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=4, scan_rounds=4
+    )
+    rng = np.random.default_rng(71)
+    reqs = [(r, *_obs(rng)) for r in range(6)]
+    results = {}
+    for r, qd, tau in reqs[:3]:
+        sched.submit(r, qd, tau)
+    nxt = 3
+    while len(results) < len(reqs):
+        for res in sched.step():
+            results[res.robot_id] = res
+        if nxt < len(reqs) and sched.round % 2 == 0:
+            sched.submit(*reqs[nxt])  # lands mid-window, admitted at boundary
+            nxt += 1
+    assert sched.windows > 0 and sched.decode_rounds >= 4 * sched.windows - 3
+    for r, qd, tau in reqs:
+        want = policy(qd, tau)[0]
+        got = tok.decode_action(results[r].tokens).reshape(8, 7)
+        np.testing.assert_array_equal(want, got, err_msg=f"robot {r}")
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_scan_window_bit_identical_hetero_fleet(f32_stack):
+    """Acceptance: the multi-round scan path is bit-identical (f32) to the
+    isolated per-robot paths for a mixed-cut fleet."""
+
+    from repro.partition.executor import PartitionExecutor, PartitionedPolicy
+
+    _, model, params, tok = f32_stack
+    ex1 = PartitionExecutor(model, params, cut_layer=1)
+    ex2 = ex1.with_cut(2)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=6, scan_rounds=3
+    )
+    sched.attach_partition(ex1)
+    sched.attach_partition(ex2)
+    rng = np.random.default_rng(72)
+    cuts = {0: None, 1: 1, 2: 2, 3: 1, 4: 2, 5: None}
+    reqs = [(r, *_obs(rng)) for r in cuts]
+    for r, qd, tau in reqs:
+        sched.submit(r, qd, tau, partitioned=cuts[r] is not None, cut=cuts[r])
+    results = {res.robot_id: res for res in sched.drain()}
+
+    assert sched.hetero_rounds > 0 and sched.mixed_rounds > 0
+    policies = {
+        None: CloudPolicy(model, params, tok),
+        1: PartitionedPolicy(ex1, tok),
+        2: PartitionedPolicy(ex2, tok),
+    }
+    for r, qd, tau in reqs:
+        want = policies[cuts[r]](qd, tau)[0]
+        got = tok.decode_action(results[r].tokens).reshape(8, 7)
+        np.testing.assert_array_equal(want, got, err_msg=f"robot {r} cut {cuts[r]}")
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_cancel_mid_scan_window_defers_page_release(stack):
+    """Satellite: a cancel landing between scan boundaries marks the row
+    dead; its pages stay allocated until the boundary (the donated in-flight
+    buffers still reference them) and the pool drains to in_use == 0."""
+
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=2, scan_rounds=4
+    )
+    rng = np.random.default_rng(73)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng))
+    out = sched.step()  # dispatches the 4-round window
+    assert out == [] and sched._window is not None
+    assert sched.allocator.num_in_use == 2 * sched.pages_per_req
+    assert sched.cancel(0)
+    # mid-window: the row is dead but its pages are still referenced by the
+    # donated in-flight scan — they must NOT be reusable yet
+    assert sched.allocator.num_in_use == 2 * sched.pages_per_req
+    assert sched.cancelled == 1
+    results = sched.drain()
+    assert {res.robot_id for res in results} == {1}
+    assert sched.pool_stats().pages_in_use == 0
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_cancel_mid_scan_split_lane_drains_clean(f32_stack):
+    """Mid-window cancel of a partitioned robot: dead at the boundary, lane
+    row arrays released when it was the last member, pool drains clean."""
+
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = f32_stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=2, scan_rounds=4
+    )
+    sched.attach_partition(ex)
+    rng = np.random.default_rng(74)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng), partitioned=True)
+    sched.step()
+    assert sched._window is not None
+    assert sched.cancel(1)
+    assert sched.allocator.num_in_use == 2 * sched.pages_per_req
+    results = sched.drain()
+    assert {res.robot_id for res in results} == {0}
+    assert sched.pool_stats().pages_in_use == 0
+    assert not sched._lanes[1].has_buffers
+
+
+def test_round_boundary_admission_cancels_queued_not_prefilled(stack):
+    """Satellite: with admission every R rounds, a deferred submission that
+    is cancelled before its boundary is a pure queue removal — no pages, no
+    paid prefill — while in-flight work is untouched."""
+
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(
+        model, params, tok, max_slots=2, scan_rounds=3
+    )
+    rng = np.random.default_rng(75)
+    sched.submit(0, *_obs(rng))
+    sched.step()  # robot 0 admitted, window dispatched
+    pages = sched.allocator.num_in_use
+    assert pages == sched.pages_per_req
+    # staggered arrival mid-window with a deferral (PR 5's defer-hot window)
+    sched.submit(1, *_obs(rng), defer_rounds=1)
+    assert sched.n_pending == 1 and sched.deferred == 1
+    sched.step()  # mid-window: no admission happens between boundaries
+    assert sched.allocator.num_in_use == pages, "queued request took pages"
+    assert sched.cancel(1), "cancel must hit the queued request"
+    assert sched.n_pending == 0
+    assert sched.allocator.num_in_use == pages
+    results = sched.drain()
+    assert {res.robot_id for res in results} == {0}
+    assert sched.allocator.num_free == sched.allocator.num_pages
+
+
+def test_pipelined_lane_matches_serial_pingpong(f32_stack):
+    """The fused device-resident split window must emit exactly the serial
+    per-token host ping-pong's chunks (f32, same requests, both cuts)."""
+
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = f32_stack
+    ex1 = PartitionExecutor(model, params, cut_layer=1)
+
+    def run(pipelined):
+        sched = ContinuousBatchingScheduler(model, params, tok, max_slots=4)
+        sched.attach_partition(ex1, pipelined=pipelined)
+        sched.attach_partition(ex1.with_cut(2), pipelined=pipelined)
+        rng = np.random.default_rng(76)
+        for r in range(4):
+            sched.submit(r, *_obs(rng), partitioned=True, cut=1 + r % 2)
+        return {res.robot_id: res.tokens for res in sched.drain()}
+
+    serial, pipelined = run(False), run(True)
+    assert serial.keys() == pipelined.keys()
+    for r in serial:
+        np.testing.assert_array_equal(serial[r], pipelined[r], err_msg=f"robot {r}")
