@@ -33,6 +33,8 @@ distinct cuts decode in the same scheduler rounds against one KV page pool.
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 6 --trigger rapid --assign-cuts
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --scan-rounds 4 --profile /tmp/trace
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --scan-rounds 4 \
+        --trace-out trace.json --metrics-json metrics.json
 """
 
 import argparse
@@ -79,6 +81,11 @@ def main(argv=None):
     p.add_argument("--profile", default=None, metavar="DIR",
                    help="wrap the fleet serve loop in jax.profiler.trace "
                         "writing to DIR, and print per-window host-gap time")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome-trace/Perfetto JSON of request "
+                        "lifecycles (fleet mode; load in ui.perfetto.dev)")
+    p.add_argument("--metrics-json", default=None, metavar="PATH",
+                   help="dump the fleet run's metrics registry as flat JSON")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -89,8 +96,14 @@ def main(argv=None):
 
     if args.fleet:
         from repro.launch.serve import plan_fleet_partition
+        from repro.obs import Observability
         from repro.partition.planner import NETWORK_PROFILES
 
+        want_obs = bool(args.trace_out or args.metrics_json)
+        mk_obs = (
+            (lambda: Observability(trace=args.trace_out is not None))
+            if want_obs else (lambda: None)
+        )
         executor = None
         split = []
         if args.partition != "none":
@@ -112,7 +125,7 @@ def main(argv=None):
                 channel=NETWORK_PROFILES[args.network],
                 partition_executor=executor, split_robots=split,
                 trigger=args.trigger, defer_hot_admission=args.defer_hot,
-                scan_rounds=args.scan_rounds,
+                scan_rounds=args.scan_rounds, obs=mk_obs(),
             )
         if args.assign_cuts:
             # close the loop heterogeneously: per-robot cuts from episode
@@ -131,11 +144,22 @@ def main(argv=None):
                     partition_executor=executor2, robot_cuts=robot_cuts,
                     trigger=args.trigger,
                     defer_hot_admission=args.defer_hot,
-                    scan_rounds=args.scan_rounds,
+                    scan_rounds=args.scan_rounds, obs=mk_obs(),
                 )
                 print(f"episode 2 robot cuts: {out['robot_cuts']} "
                       f"({len(out['active_cuts'])} distinct; "
                       f"{out['hetero_rounds']} hetero decode rounds)")
+        obs = out.get("obs")
+        if obs is not None:
+            if args.trace_out:
+                obs.trace.write(args.trace_out)
+                print(f"trace: {obs.trace.n_events} events -> {args.trace_out}")
+            if args.metrics_json:
+                import json
+
+                with open(args.metrics_json, "w") as f:
+                    json.dump(obs.metrics.to_json(), f, indent=1)
+                print(f"metrics: -> {args.metrics_json}")
         served = len(out["service_rounds"])
         pool = out["pool"]
         tel = out["telemetry"]

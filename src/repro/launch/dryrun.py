@@ -23,7 +23,6 @@ Usage:
 
 import argparse
 import json
-import time
 import traceback
 from typing import Dict, Optional, Tuple
 
@@ -42,6 +41,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import logical_to_pspec, make_rules, sharding_rules
 from repro.models.layers import Axes, is_axes
 from repro.models.model import Model
+from repro.obs.clock import clock
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import linear_warmup_cosine
 from repro.roofline import HW_V5E, collective_bytes_from_hlo, roofline_from_compiled
@@ -228,7 +228,7 @@ def run_combo(
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     chips = 512 if multi_pod else 256
-    t0 = time.time()
+    t0 = clock()
     with sharding_rules(mesh, RULE_OVERRIDES[shape.kind]):
         fn, args, loop_trip = build_combo(cfg, shape, mesh, multi_pod, variant)
         with mesh:
@@ -265,7 +265,7 @@ def run_combo(
     )
     rec = terms.as_dict()
     rec.update(
-        compile_s=round(time.time() - t0, 1),
+        compile_s=round(clock() - t0, 1),
         collective_breakdown={k: v / 1e9 for k, v in coll.items()},
         xla_cost_flops=float(cost.get("flops", 0.0)),
         xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),

@@ -30,7 +30,7 @@ share decode rounds and KV pages with the cloud-only robots.
 from __future__ import annotations
 
 import argparse
-import time
+import json
 from typing import List, Optional
 
 import jax
@@ -43,6 +43,8 @@ from repro.core.kinematics import KinematicFrame
 from repro.core.trigger import TriggerConfig
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
+from repro.obs import Observability, build_slo_report
+from repro.obs.clock import clock
 from repro.robotics.episodes import generate_episode
 from repro.runtime.channel import ChannelConfig, sample_latency_ms
 from repro.runtime.policy import FleetTelemetry, PolicyConfig
@@ -181,9 +183,9 @@ def serve_episode(
         # if it dispatched, charge a real cloud inference for the fresh chunk
         state, out = step_fn(state, frame, cached_chunk)
         if bool(out.offloaded):
-            t0 = time.time()
+            t0 = clock()
             fresh = policy(ep.qd[t : t + 1], ep.tau[t : t + 1])[0]
-            cloud_ms.append((time.time() - t0) * 1e3)
+            cloud_ms.append((clock() - t0) * 1e3)
             cached_chunk = jnp.asarray(fresh)
             n_off += 1
         actions.append(np.asarray(out.action))
@@ -221,6 +223,7 @@ def serve_fleet(
     trigger: str = "always",
     trigger_cfg: Optional[TriggerConfig] = None,
     record_streams: bool = False,
+    obs: Optional[Observability] = None,
     verbose: bool = True,
 ):
     """A robot fleet served by one continuous-batching cloud engine.
@@ -275,6 +278,13 @@ def serve_fleet(
     ``plan_partition(offload_fraction=...)`` (see ``replan_from_telemetry``)
     to re-price partition cuts with the fleet's actual redundancy instead of
     the global trigger-sim constant.
+
+    ``obs`` (an ``Observability``) turns on end-to-end request tracing and
+    SLO accounting: the scheduler stamps every chunk's lifecycle at its
+    host-owned boundaries, the decision core feeds fleet counters, and the
+    run's ``SLOReport`` is printed (verbose) and returned under ``"slo"``.
+    Decoded actions are byte-identical with and without ``obs`` — no extra
+    host↔device syncs are introduced.
     """
 
     from repro.runtime.scheduler import ContinuousBatchingScheduler
@@ -303,12 +313,12 @@ def serve_fleet(
     )
     state = rpolicy.trigger_init(pcfg, (n_robots,))
     step_fn = jax.jit(lambda s, f: rpolicy.trigger_step(s, f, pcfg))
-    telemetry = FleetTelemetry(n_robots, record_streams=record_streams)
+    telemetry = FleetTelemetry(n_robots, record_streams=record_streams, obs=obs)
 
     sched = ContinuousBatchingScheduler(
         model, params, tokenizer,
         max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
-        num_pages=num_pages, scan_rounds=scan_rounds,
+        num_pages=num_pages, scan_rounds=scan_rounds, obs=obs,
     )
     if robot_cuts is None:
         robot_cuts = (
@@ -338,6 +348,7 @@ def serve_fleet(
     offload_ms: List[float] = []
     offload_ms_by_robot: List[List[float]] = [[] for _ in range(n_robots)]
     rows = np.arange(n_robots)
+    t_start = clock()
 
     for t in range(t_len):
         frame = KinematicFrame(
@@ -381,9 +392,9 @@ def serve_fleet(
             in_flight.add(r)
             n_off[r] += 1
         prev_windows = sched.windows
-        t0 = time.perf_counter()
+        t0 = clock()
         results = sched.step()
-        step_ms = (time.perf_counter() - t0) * 1e3
+        step_ms = (clock() - t0) * 1e3
         if sched.windows > prev_windows:
             telemetry.note_boundary(step_ms)
         for res in results:
@@ -402,6 +413,10 @@ def serve_fleet(
             offload_ms_by_robot[res.robot_id].append(ms)
 
     pool = sched.pool_stats()
+    slo = None
+    if obs is not None:
+        obs.metrics.gauge("serve.wall_s").set(clock() - t_start)
+        slo = build_slo_report(obs.metrics)
     if verbose:
         print(
             f"fleet={n_robots} steps={t_len} trigger={trigger} "
@@ -426,7 +441,12 @@ def serve_fleet(
             + f"net_ms={np.mean(offload_ms) if offload_ms else 0:.1f}"
             f"±{np.std(offload_ms) if offload_ms else 0:.1f}"
         )
+        if slo is not None:
+            for line in slo.lines():
+                print(line)
     return {
+        "slo": slo.to_json() if slo is not None else None,
+        "obs": obs,
         "offloads": n_off,
         "steps": t_len,
         "actions": actions,
@@ -676,6 +696,13 @@ def main(argv=None):
                    help="cancellation-aware admission: preempt-rate "
                         "threshold above which a preempting robot's "
                         "admission is held one round")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome-trace/Perfetto JSON of the fleet "
+                        "run's request lifecycles (load in ui.perfetto.dev)")
+    p.add_argument("--metrics-json", default=None, metavar="PATH",
+                   help="dump the run's metrics registry as flat JSON")
+    p.add_argument("--metrics-prom", default=None, metavar="PATH",
+                   help="dump the metrics in Prometheus text exposition")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -683,6 +710,11 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
     if args.fleet:
+        want_obs = bool(args.trace_out or args.metrics_json or args.metrics_prom)
+        mk_obs = (
+            (lambda: Observability(trace=args.trace_out is not None))
+            if want_obs else (lambda: None)
+        )
         executor = None
         split = []
         if args.partition != "none":
@@ -697,7 +729,7 @@ def main(argv=None):
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
             trigger=args.trigger, defer_hot_admission=args.defer_hot,
-            scan_rounds=args.scan_rounds,
+            scan_rounds=args.scan_rounds, obs=mk_obs(),
         )
         if args.assign_cuts:
             # close the loop: re-assign per-robot cuts from episode 1's
@@ -707,15 +739,30 @@ def main(argv=None):
                 k_max=args.k_max,
             )
             if robot_cuts:
+                # fresh Observability per episode: the exported trace and
+                # SLO report describe the heterogeneous episode alone
                 out = serve_fleet(
                     model, params, tok, n_robots=args.fleet,
                     max_steps=args.steps, partition_executor=executor2,
                     robot_cuts=robot_cuts, trigger=args.trigger,
                     defer_hot_admission=args.defer_hot,
-                    scan_rounds=args.scan_rounds,
+                    scan_rounds=args.scan_rounds, obs=mk_obs(),
                 )
         elif args.trigger == "rapid" and args.partition != "none":
             replan_from_telemetry(args.arch, out["telemetry"], args.network)
+        obs = out.get("obs")
+        if obs is not None:
+            if args.trace_out:
+                obs.trace.write(args.trace_out)
+                print(f"trace: {obs.trace.n_events} events -> {args.trace_out}")
+            if args.metrics_json:
+                with open(args.metrics_json, "w") as f:
+                    json.dump(obs.metrics.to_json(), f, indent=1)
+                print(f"metrics: -> {args.metrics_json}")
+            if args.metrics_prom:
+                with open(args.metrics_prom, "w") as f:
+                    f.write(obs.metrics.to_prometheus())
+                print(f"metrics: -> {args.metrics_prom}")
         return out
     policy, _ = build_policy(
         model, params, tok, args.arch, args.partition, args.network,

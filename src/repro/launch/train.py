@@ -9,7 +9,6 @@ shards via the production mesh (``--mesh``).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +23,7 @@ from repro.data.pipeline import (
     synthetic_lm_batches,
 )
 from repro.models.model import Model
+from repro.obs.clock import clock
 from repro.optim import AdamWConfig, adamw_init, adamw_update, linear_warmup_cosine
 
 
@@ -72,7 +72,7 @@ def main(argv=None) -> dict:
     step_fn = make_train_step(model, ocfg, args.steps)
 
     losses = []
-    t0 = time.time()
+    t0 = clock()
     for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(it).items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch)
@@ -81,7 +81,7 @@ def main(argv=None) -> dict:
             print(
                 f"step {step:5d} loss {losses[-1]:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
-                f"({(time.time()-t0)/(step+1):.2f}s/step)"
+                f"({(clock()-t0)/(step+1):.2f}s/step)"
             )
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             path = save(args.ckpt_dir, {"params": params}, step=step + 1)

@@ -1,0 +1,139 @@
+"""SLO report: the serving registry distilled into the numbers that gate.
+
+ROADMAP item 1 (fleet-scale serving) reports through p50/p99 chunk
+latency, queue wait, goodput, cancel rate and page-pool high-water —
+this module turns a ``MetricsRegistry`` fed by one serving run into
+exactly those lines.  ``serve_fleet`` prints the report at end of
+episode and embeds ``to_json()`` in its output dict; the serving bench
+merges the percentile fields into ``BENCH_serving.json``.
+
+Canonical metric names (producers must agree with these):
+
+  * ``serve.chunk_latency_ms``  — submit → harvest wall per chunk
+  * ``serve.queue_wait_ms``     — submit → admission (batched prefill)
+  * ``serve.host_gap_ms``       — host orchestration per window boundary
+  * ``sched.window_ms``         — dispatch → harvest per scan window
+  * ``sched.submissions/admissions/completions/cancels/...`` — counters
+  * ``fleet.fires/replays/preempts`` — decision-core counters
+  * ``pool.pages_in_use/high_water/page_allocs_total/...`` — KV pool
+  * ``serve.wall_s``            — episode wall seconds (goodput basis)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.obs.metrics import Counter, Gauge, MetricsRegistry
+
+
+def _pcts(metrics: MetricsRegistry, name: str) -> Dict[str, float]:
+    h = metrics.get(name)
+    if h is None or h.count == 0:
+        return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                "p99": 0.0, "max": 0.0}
+    return h.percentiles()
+
+
+def _count(metrics: MetricsRegistry, name: str) -> int:
+    c = metrics.get(name)
+    return int(c.value) if isinstance(c, Counter) else 0
+
+
+def _gauge(metrics: MetricsRegistry, name: str, high: bool = False) -> float:
+    g = metrics.get(name)
+    if not isinstance(g, Gauge):
+        return 0.0
+    return float(g.high if high else g.value)
+
+
+@dataclass
+class SLOReport:
+    """Percentiles + rates for one serving run (all times milliseconds)."""
+
+    chunk_latency_ms: Dict[str, float] = field(default_factory=dict)
+    queue_wait_ms: Dict[str, float] = field(default_factory=dict)
+    host_gap_ms: Dict[str, float] = field(default_factory=dict)
+    window_ms: Dict[str, float] = field(default_factory=dict)
+    completions: int = 0
+    submissions: int = 0
+    cancels: int = 0
+    fetches: int = 0
+    replays: int = 0
+    wall_s: float = 0.0
+    goodput_chunks_s: float = 0.0
+    cancel_rate: float = 0.0
+    replay_fraction: float = 0.0
+    pool_high_water: int = 0
+    pool_page_allocs: int = 0
+    pool_page_frees: int = 0
+
+    def to_json(self) -> Dict[str, object]:
+        rd = lambda d: {k: round(float(v), 4) for k, v in d.items()}
+        return {
+            "chunk_latency_ms": rd(self.chunk_latency_ms),
+            "queue_wait_ms": rd(self.queue_wait_ms),
+            "host_gap_ms": rd(self.host_gap_ms),
+            "window_ms": rd(self.window_ms),
+            "completions": self.completions,
+            "submissions": self.submissions,
+            "cancels": self.cancels,
+            "fetches": self.fetches,
+            "replays": self.replays,
+            "wall_s": round(self.wall_s, 4),
+            "goodput_chunks_s": round(self.goodput_chunks_s, 3),
+            "cancel_rate": round(self.cancel_rate, 4),
+            "replay_fraction": round(self.replay_fraction, 4),
+            "pool_high_water": self.pool_high_water,
+            "pool_page_allocs": self.pool_page_allocs,
+            "pool_page_frees": self.pool_page_frees,
+        }
+
+    def lines(self) -> List[str]:
+        """Human-readable SLO lines (printed at end of ``serve_fleet``)."""
+
+        f = lambda d: (
+            f"p50={d['p50']:.2f} p90={d['p90']:.2f} p99={d['p99']:.2f} "
+            f"mean={d['mean']:.2f} max={d['max']:.2f} (n={d['count']})"
+        )
+        return [
+            f"SLO chunk_latency_ms: {f(self.chunk_latency_ms)}",
+            f"SLO queue_wait_ms:    {f(self.queue_wait_ms)}",
+            f"SLO host_gap_ms:      {f(self.host_gap_ms)}",
+            f"SLO goodput: {self.goodput_chunks_s:.2f} chunks/s over "
+            f"{self.wall_s:.2f}s wall "
+            f"({self.completions}/{self.submissions} submitted chunks, "
+            f"cancel_rate={self.cancel_rate:.3f}, "
+            f"replay_fraction={self.replay_fraction:.3f})",
+            f"SLO kv pool: high_water={self.pool_high_water} pages "
+            f"(allocs={self.pool_page_allocs} frees={self.pool_page_frees})",
+        ]
+
+
+def build_slo_report(metrics: MetricsRegistry) -> SLOReport:
+    """Distill a serving run's registry into an ``SLOReport``."""
+
+    completions = _count(metrics, "sched.completions")
+    submissions = _count(metrics, "sched.submissions")
+    cancels = _count(metrics, "sched.cancels")
+    fetches = _count(metrics, "fleet.fires")
+    replays = _count(metrics, "fleet.replays")
+    wall_s = _gauge(metrics, "serve.wall_s")
+    return SLOReport(
+        chunk_latency_ms=_pcts(metrics, "serve.chunk_latency_ms"),
+        queue_wait_ms=_pcts(metrics, "serve.queue_wait_ms"),
+        host_gap_ms=_pcts(metrics, "serve.host_gap_ms"),
+        window_ms=_pcts(metrics, "sched.window_ms"),
+        completions=completions,
+        submissions=submissions,
+        cancels=cancels,
+        fetches=fetches,
+        replays=replays,
+        wall_s=wall_s,
+        goodput_chunks_s=completions / wall_s if wall_s > 0 else 0.0,
+        cancel_rate=cancels / max(submissions, 1),
+        replay_fraction=replays / max(fetches + replays, 1),
+        pool_high_water=int(_gauge(metrics, "pool.high_water", high=True)),
+        pool_page_allocs=int(_gauge(metrics, "pool.page_allocs_total")),
+        pool_page_frees=int(_gauge(metrics, "pool.page_frees_total")),
+    )

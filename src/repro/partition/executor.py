@@ -36,6 +36,7 @@ import numpy as np
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.layers import embed_lookup, rms_norm
 from repro.models.model import Model
+from repro.obs.clock import clock
 from repro.partition.planner import interior_net_ms
 from repro.runtime.channel import ChannelConfig
 from repro.runtime.kv_cache import donating_jit, scatter_prompt_into_pool
@@ -69,6 +70,9 @@ class PartitionExecutor:
         self.cut_layer = cut_layer
         self.channel = channel or ChannelConfig()
         self.shipped_bytes = 0.0
+        # optional Observability handle (attach_partition sets it): when
+        # present, the serial ping-pong legs record per-cut dispatch times
+        self.obs = None
 
         if _shared is None:
             # per-layer params with the stacked repeats dim sliced out
@@ -98,10 +102,12 @@ class PartitionExecutor:
 
         if cut_layer == self.cut_layer:
             return self
-        return PartitionExecutor(
+        sibling = PartitionExecutor(
             self.model, None, cut_layer, self.channel,
             _shared=(self._per_layer, self._base),
         )
+        sibling.obs = self.obs
+        return sibling
 
     # ------------------------------------------------------------------
     # full-sequence split forward (the parity surface)
@@ -325,10 +331,24 @@ class PartitionExecutor:
             ]
         return edge_rows
 
+    def _stamp(self, side: str, op: str, t0: float) -> None:
+        """Record one host-leg dispatch duration into the lane's histogram
+        (``lane.edge_ms`` / ``lane.suffix_ms`` labeled by cut + op).  The
+        call is async-dispatch timing — no device sync is added."""
+
+        self.obs.metrics.histogram(
+            f"lane.{side}_ms", cut=self.cut_layer, op=op
+        ).observe((clock() - t0) * 1e3)
+
     def edge_prefill(self, tokens: np.ndarray):
         """Robot-side prompt prefill -> (cut activations [1,S,D], edge caches)."""
 
-        return self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+        if self.obs is None:
+            return self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+        t0 = clock()
+        out = self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+        self._stamp("edge", "prefill", t0)
+        return out
 
     def _edge_prefill_impl(self, sp, tokens):
         batch = {"tokens": tokens}
@@ -347,12 +367,22 @@ class PartitionExecutor:
         """One robot-side ping-pong leg: embed the sampled token, run the
         edge prefix -> (cut activation [1,1,D], new edge caches)."""
 
-        return self._edge_step_j(
+        if self.obs is None:
+            return self._edge_step_j(
+                self.split_params,
+                jnp.asarray([[token]], jnp.int32),
+                caches,
+                jnp.asarray(length, jnp.int32),
+            )
+        t0 = clock()
+        out = self._edge_step_j(
             self.split_params,
             jnp.asarray([[token]], jnp.int32),
             caches,
             jnp.asarray(length, jnp.int32),
         )
+        self._stamp("edge", "step", t0)
+        return out
 
     def _edge_step_impl(self, sp, token, caches, length):
         cfg = self.cfg
@@ -372,10 +402,18 @@ class PartitionExecutor:
         (new layers, last-token logits [n, V]).
         """
 
-        return self._suffix_prefill_j(
+        if self.obs is None:
+            return self._suffix_prefill_j(
+                self.split_params, jnp.asarray(x), layers, jnp.asarray(pt_new),
+                jnp.asarray(row_idx), jnp.asarray(lens), jnp.asarray(caps),
+            )
+        t0 = clock()
+        out = self._suffix_prefill_j(
             self.split_params, jnp.asarray(x), layers, jnp.asarray(pt_new),
             jnp.asarray(row_idx), jnp.asarray(lens), jnp.asarray(caps),
         )
+        self._stamp("suffix", "prefill", t0)
+        return out
 
     def _suffix_prefill_impl(self, sp, x, layers, pt_new, row_idx, lens, caps):
         n, s = x.shape[0], x.shape[1]
@@ -409,10 +447,18 @@ class PartitionExecutor:
         Returns (logits [B, V], new layers).
         """
 
-        return self._suffix_step_j(
+        if self.obs is None:
+            return self._suffix_step_j(
+                self.split_params, jnp.asarray(x), layers, jnp.asarray(page_table),
+                jnp.asarray(lens), jnp.asarray(caps),
+            )
+        t0 = clock()
+        out = self._suffix_step_j(
             self.split_params, jnp.asarray(x), layers, jnp.asarray(page_table),
             jnp.asarray(lens), jnp.asarray(caps),
         )
+        self._stamp("suffix", "step", t0)
+        return out
 
     def _suffix_step_impl(self, sp, x, layers, page_table, lens, caps):
         x = x.astype(self.model.dtype)

@@ -70,7 +70,15 @@ class PagedSpec:
 
 
 class PageAllocator:
-    """LIFO free-list over a fixed pool of page ids (host-side, O(1) ops)."""
+    """LIFO free-list over a fixed pool of page ids (host-side, O(1) ops).
+
+    ``high_water`` tracks the peak pages-in-use since construction or the
+    last ``reset_high_water`` — the serving loop resets it between
+    episodes so per-episode ``PoolStats.high_water`` reports that
+    episode's KV pressure, not a lifetime max.  ``total_allocs`` /
+    ``total_frees`` are lifetime page counts (never reset) feeding the
+    observability registry's alloc/free rates.
+    """
 
     def __init__(self, num_pages: int):
         if num_pages <= 0:
@@ -78,6 +86,8 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self.high_water = 0
+        self.total_allocs = 0
+        self.total_frees = 0
 
     @property
     def num_free(self) -> int:
@@ -91,6 +101,7 @@ class PageAllocator:
         if n > len(self._free):
             raise OutOfPages(f"requested {n} pages, {len(self._free)} free")
         out = [self._free.pop() for _ in range(n)]
+        self.total_allocs += n
         self.high_water = max(self.high_water, self.num_in_use)
         return out
 
@@ -101,6 +112,24 @@ class PageAllocator:
             if p in self._free:
                 raise ValueError(f"double free of page {p}")
             self._free.append(p)
+        self.total_frees += len(pages)
+
+    def reset_high_water(self) -> None:
+        """Restart the high-water mark at the current occupancy (called
+        between serving episodes so the mark is per-episode)."""
+
+        self.high_water = self.num_in_use
+
+    def reclaim_all(self) -> None:
+        """Return every page to the free list and restart the high-water
+        mark (scheduler reset between episodes).  Pages still claimed by
+        dropped sequences are reclaimed wholesale, so the caller must
+        have discarded all sequence state; lifetime alloc/free counters
+        survive (the reclaimed pages count as freed)."""
+
+        self.total_frees += self.num_in_use
+        self._free = list(range(self.num_pages - 1, -1, -1))
+        self.reset_high_water()
 
 
 @partial(donating_jit, donate_argnums=(0,))

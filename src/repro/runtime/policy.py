@@ -226,6 +226,11 @@ class FleetTelemetry:
 
     n_robots: int
     record_streams: bool = False
+    # optional Observability handle: when set, decision counters and the
+    # per-boundary host gap also feed the shared metrics registry
+    # (``fleet.*`` counters, ``serve.host_gap_ms``) so the SLO report sees
+    # decision-core activity without a second accounting path
+    obs: Optional[object] = None
     ticks: int = 0
     fires: np.ndarray = None        # cloud refill DECISIONS (in "always"
     # mode the serving loop skips fires landing while a request is already
@@ -261,6 +266,12 @@ class FleetTelemetry:
         self.fires += off
         self.replays += rep
         self.preempts += pre
+        if self.obs is not None:
+            m = self.obs.metrics
+            m.counter("fleet.ticks").inc()
+            m.counter("fleet.fires").inc(int(off.sum()))
+            m.counter("fleet.replays").inc(int(rep.sum()))
+            m.counter("fleet.preempts").inc(int(pre.sum()))
         if self.record_streams:
             self.offload_stream.append(off)
             self.replay_stream.append(rep)
@@ -269,12 +280,16 @@ class FleetTelemetry:
 
     def note_cancel(self, robot_id: int) -> None:
         self.cancels[robot_id] += 1
+        if self.obs is not None:
+            self.obs.metrics.counter("fleet.cancels").inc()
 
     def note_boundary(self, host_ms: float) -> None:
         """One scan-window boundary crossed; ``host_ms`` is its host gap."""
 
         self.scan_windows += 1
         self.boundary_ms.append(float(host_ms))
+        if self.obs is not None:
+            self.obs.metrics.histogram("serve.host_gap_ms").observe(host_ms)
 
     def host_gap_ms(self) -> float:
         """Mean host milliseconds per window boundary (0 if none seen)."""
@@ -283,6 +298,8 @@ class FleetTelemetry:
 
     def note_completion(self, robot_id: int) -> None:
         self.completions[robot_id] += 1
+        if self.obs is not None:
+            self.obs.metrics.counter("fleet.completions").inc()
 
     def streams(self) -> Dict[str, np.ndarray]:
         """[T, R] decision streams (requires ``record_streams=True``)."""

@@ -44,6 +44,18 @@ cross-lane batching needs no per-lane pool copies).
 
 Every ``ChunkResult`` carries a pool-utilization snapshot (pages in use /
 free / high-water) so serving telemetry sees KV pressure directly.
+
+**Observability.**  Pass ``obs=Observability()`` to record the full
+request lifecycle: submission, queue wait, admission, per-window decode
+spans and completion/cancel are stamped with the monotonic ``obs.clock``
+— but ONLY at the host-owned boundaries above (submit, admit, window
+close), so instrumentation adds no host↔device syncs and the decoded
+tokens are byte-identical to an uninstrumented run.  Each stamp feeds
+the metrics registry (``serve.chunk_latency_ms``, ``serve.queue_wait_ms``,
+``sched.*`` counters, ``pool.*`` gauges) and, when tracing, spans on one
+track per robot (chunk ⊃ queue ⊃ decode) and one per lane (windows).
+Every completion harvested at a boundary shares that boundary's single
+clock read, so request spans align exactly with their window's close.
 """
 
 from __future__ import annotations
@@ -58,6 +70,7 @@ import numpy as np
 
 from repro.data.pipeline import EpisodeTokenizer
 from repro.models.model import Model
+from repro.obs.clock import clock
 from repro.runtime.kv_cache import PageAllocator, PagedSpec, donating_jit
 
 DEFAULT_PAGE_SIZE = 16
@@ -79,6 +92,7 @@ class ChunkRequest:
     submitted_round: int
     order: int = 0           # global FIFO position across all lanes
     earliest_round: int = 0  # admission deferral (cancellation-aware)
+    submit_ts: float = 0.0   # obs.clock at submission (0 when obs is off)
 
 
 @dataclass(frozen=True)
@@ -100,6 +114,12 @@ class ChunkResult:
     kind: str = "cloud"      # "cloud" (full stack) | "split" (cloud suffix)
     pool: Optional[PoolStats] = None
     cut: Optional[int] = None  # split kind: the lane's edge layer count
+    # request-lifecycle wall stamps (obs.clock seconds; 0 when obs is off).
+    # ``completed_ts`` is the harvesting boundary's single clock read, so
+    # results of one window share it exactly.
+    submitted_ts: float = 0.0
+    admitted_ts: float = 0.0
+    completed_ts: float = 0.0
 
 
 @dataclass
@@ -116,6 +136,7 @@ class _Sequence:
     # cancelled while a scan window was in flight: the donated decode still
     # writes this row's pages, so they are freed at the boundary, not here
     dead: bool = False
+    admit_ts: float = 0.0    # obs.clock at batched-prefill admission
 
 
 @dataclass
@@ -128,6 +149,7 @@ class _ScanWindow:
     seqs: List[_Sequence] = field(default_factory=list)
     lane_toks: Dict[int, object] = field(default_factory=dict)
     lane_seqs: Dict[int, list] = field(default_factory=dict)
+    t_open: float = 0.0                  # obs.clock at dispatch
 
 
 class ContinuousBatchingScheduler:
@@ -147,12 +169,17 @@ class ContinuousBatchingScheduler:
         page_size: int = DEFAULT_PAGE_SIZE,
         num_pages: Optional[int] = None,
         scan_rounds: int = 1,
+        obs=None,
     ):
         if model.cfg.encoder_decoder:
             raise NotImplementedError("continuous batching targets decoder-only VLAs")
         self.model = model
         self.params = params
         self.tok = tokenizer
+        # optional Observability handle; every producer site is guarded on
+        # ``self.obs is not None`` so a None handle costs nothing.  Swappable
+        # between runs (the serving bench attaches a fresh one per run).
+        self.obs = obs
         # ``max_slots`` no longer caps residency — it sizes the initial row
         # arrays and the *default* page pool (kept so the default capacity
         # matches the old fixed-slot engine); pass ``num_pages`` to admit
@@ -244,6 +271,8 @@ class ContinuousBatchingScheduler:
         cut = executor.cut_layer
         if cut in self._lanes:
             raise ValueError(f"cut {cut} already has a lane attached")
+        if self.obs is not None and getattr(executor, "obs", None) is None:
+            executor.obs = self.obs  # lane spans share the run's registry
         self._lanes[cut] = _SplitLane(self, executor, rows, pipelined)
 
     def _lane_for(self, cut: Optional[int]) -> "_SplitLane":
@@ -285,6 +314,12 @@ class ContinuousBatchingScheduler:
         )
         if defer_rounds > 0:
             self.deferred += 1
+        if self.obs is not None:
+            req.submit_ts = clock()
+            m = self.obs.metrics
+            m.counter("sched.submissions").inc()
+            if defer_rounds > 0:
+                m.counter("sched.deferred").inc()
         if partitioned:
             self._lane_for(cut).queue.append(req)
         else:
@@ -310,26 +345,36 @@ class ContinuousBatchingScheduler:
                 if req.robot_id == robot_id:
                     lane_queue.remove(req)
                     self.cancelled += 1
+                    self._obs_cancel(req.robot_id, req.submit_ts, queued=True)
                     return True
         w = self._window
         for seq in self._seqs.values():
             if seq.robot_id == robot_id and not seq.dead:
-                if w is not None and any(s is seq for s in w.seqs):
+                dead = w is not None and any(s is seq for s in w.seqs)
+                if dead:
                     seq.dead = True
                 else:
                     self._release(seq)
                 self.cancelled += 1
+                self._obs_cancel(
+                    seq.robot_id, seq.request.submit_ts, dead=dead
+                )
                 return True
         for lane in self._lanes.values():
             for seq in lane.seqs.values():
                 if seq.robot_id == robot_id and not seq.dead:
-                    if w is not None and any(
+                    dead = w is not None and any(
                         s is seq for s in w.lane_seqs.get(lane.cut, ())
-                    ):
+                    )
+                    if dead:
                         seq.dead = True
                     else:
                         lane.release(seq)
                     self.cancelled += 1
+                    self._obs_cancel(
+                        seq.robot_id, seq.request.submit_ts,
+                        dead=dead, cut=lane.cut,
+                    )
                     return True
         return False
 
@@ -360,7 +405,10 @@ class ContinuousBatchingScheduler:
         self._queue.clear()
         self._seqs.clear()
         self._free_rows = list(range(self.rows))
-        self.allocator = PageAllocator(self.allocator.num_pages)
+        # same allocator object: lifetime alloc/free counters survive the
+        # reset while the high-water mark restarts, so per-episode
+        # ``PoolStats.high_water`` stays meaningful on a reused scheduler
+        self.allocator.reclaim_all()
         self._window = None
         self._logits = jnp.zeros_like(self._logits)
         self._pcache["len"] = jnp.zeros((self.rows,), jnp.int32)
@@ -542,9 +590,15 @@ class ContinuousBatchingScheduler:
         )
         pts = tuple(jnp.asarray(l._pt) for l in lanes)
         caps = tuple(jnp.asarray(l._cap) for l in lanes)
+        t0 = clock() if self.obs is not None else 0.0
         toks, new_lanes, new_pools = fn(
             ex._per_layer, ex._base, pools, lane_in, pts, caps
         )
+        if self.obs is not None:
+            # async dispatch cost of the fused window (no sync added)
+            self.obs.metrics.histogram(
+                "sched.fused_dispatch_ms", cuts="+".join(map(str, cuts))
+            ).observe((clock() - t0) * 1e3)
         self._suffix_pools = {**self._suffix_pools, **new_pools}
         for lane, nl, tk in zip(lanes, new_lanes, toks):
             lane._edge = nl["edge"]
@@ -592,6 +646,17 @@ class ContinuousBatchingScheduler:
                 new_split.setdefault(cut, []).append(
                     lane.reserve(lane.queue.popleft())
                 )
+        if self.obs is not None and (new or new_split):
+            # one clock read per admission boundary: every sequence admitted
+            # here ends its queue-wait span on the same stamp
+            t_adm = clock()
+            m = self.obs.metrics
+            admitted = new + [s for seqs in new_split.values() for s in seqs]
+            m.counter("sched.admissions").inc(len(admitted))
+            qw = m.histogram("serve.queue_wait_ms")
+            for seq in admitted:
+                seq.admit_ts = t_adm
+                qw.observe((t_adm - seq.request.submit_ts) * 1e3)
         for cut, seqs in new_split.items():
             self._lanes[cut].flush(seqs)
         if not new:
@@ -623,6 +688,84 @@ class ContinuousBatchingScheduler:
         self._free_rows.append(seq.row)
         self._pcache["cap"] = self._pcache["cap"].at[seq.row].set(0)
 
+    # ------------------------------------------------------------------
+    # observability producers (all guarded: no-ops when ``obs`` is None)
+    # ------------------------------------------------------------------
+
+    def _obs_cancel(self, robot_id: int, submit_ts: float,
+                    queued: bool = False, dead: bool = False,
+                    cut: Optional[int] = None) -> None:
+        """Stamp a cancellation (queue removal, immediate free, or a
+        mid-window dead-mark whose pages the boundary will release)."""
+
+        if self.obs is None:
+            return
+        t = clock()
+        m = self.obs.metrics
+        m.counter("sched.cancels").inc()
+        if queued:
+            m.counter("sched.cancelled_queued").inc()
+        if dead:
+            m.counter("sched.dead_marked").inc()
+        tr = self.obs.trace
+        if tr is not None:
+            args = {"robot": robot_id, "queued": queued, "dead": dead}
+            if cut is not None:
+                args["cut"] = cut
+            track = f"robot {robot_id}"
+            if submit_ts > 0.0:
+                tr.complete(track, "cancelled", submit_ts, t, args)
+            else:
+                tr.instant(track, "cancelled", t, args)
+
+    def _obs_complete(self, results: List[ChunkResult], t_end: float) -> None:
+        """Stamp harvested completions with the boundary's single clock
+        read ``t_end`` — every result of one window shares it exactly, so
+        chunk spans end on their window's close timestamp."""
+
+        if self.obs is None or not results:
+            return
+        m = self.obs.metrics
+        m.counter("sched.completions").inc(len(results))
+        h = m.histogram("serve.chunk_latency_ms")
+        tr = self.obs.trace
+        for r in results:
+            r.completed_ts = t_end
+            h.observe((t_end - r.submitted_ts) * 1e3)
+            if tr is not None:
+                track = f"robot {r.robot_id}"
+                args = {"robot": r.robot_id, "kind": r.kind,
+                        "rounds": r.completed_round - r.submitted_round}
+                if r.cut is not None:
+                    args["cut"] = r.cut
+                # nesting: chunk (lifetime) ⊃ queue wait ⊃ decode
+                tr.complete(track, "chunk", r.submitted_ts, t_end, args)
+                tr.complete(track, "queue", r.submitted_ts, r.admitted_ts)
+                tr.complete(track, "decode", r.admitted_ts, t_end)
+
+    def _obs_window_close(self, w: _ScanWindow, done: List[ChunkResult]) -> None:
+        """Window boundary: one clock read covers the window span, every
+        completion stamp, and the pool/queue gauge refresh."""
+
+        t_end = clock()
+        m = self.obs.metrics
+        m.histogram("sched.window_ms").observe((t_end - w.t_open) * 1e3)
+        tr = self.obs.trace
+        if tr is not None:
+            name = f"window {self.windows}"
+            if w.toks is not None:
+                tr.complete("lane cloud", name, w.t_open, t_end,
+                            {"rows": len(w.seqs), "rounds": self.scan_rounds})
+            for cut, seqs in w.lane_seqs.items():
+                tr.complete(f"lane cut={cut}", name, w.t_open, t_end,
+                            {"rows": len(seqs), "rounds": self.scan_rounds})
+        self._obs_complete(done, t_end)
+        alloc = self.allocator
+        m.gauge("pool.pages_in_use").set(alloc.num_in_use)
+        m.gauge("pool.high_water").set(alloc.high_water)
+        m.gauge("pool.page_allocs_total").set(alloc.total_allocs)
+        m.gauge("pool.page_frees_total").set(alloc.total_frees)
+
     def step(self) -> List[ChunkResult]:
         """Advance one decode round.
 
@@ -653,6 +796,12 @@ class ContinuousBatchingScheduler:
         self.windows += 1
         self.peak_active = max(self.peak_active, n_cloud + n_split)
         block = self._block_for_depth(self.n_pending)
+        if self.obs is not None:
+            m = self.obs.metrics
+            m.counter("sched.decode_rounds").inc(rounds)
+            m.counter("sched.windows").inc()
+            m.gauge("sched.queue_depth").set(self.n_pending)
+            m.gauge("sched.active_rows").set(n_cloud + n_split)
         done: List[ChunkResult] = []
         # serial (non-pipelined) lanes ping-pong through the host, so their
         # window runs to completion at dispatch and rides this call's return
@@ -660,7 +809,13 @@ class ContinuousBatchingScheduler:
             for _ in range(rounds):
                 if lane.seqs:
                     done.extend(lane.step(block))
+        if done and self.obs is not None:
+            # serial lanes complete at dispatch; stamp them with their own
+            # boundary read (they never ride a scan window's harvest)
+            self._obs_complete(done, clock())
         w = _ScanWindow(steps_left=rounds, n_steps=rounds * block)
+        if self.obs is not None:
+            w.t_open = clock()
         if n_cloud:
             w.toks, self._logits, self._pcache = self._decode_for(block, rounds)(
                 self.params, self._logits, self._pcache
@@ -709,12 +864,16 @@ class ContinuousBatchingScheduler:
                         completed_round=self.round,
                         kind="cloud",
                         pool=self.pool_stats(),
+                        submitted_ts=seq.request.submit_ts,
+                        admitted_ts=seq.admit_ts,
                     ))
             for seq in w.seqs:
                 if seq.dead and self._seqs.get(seq.row) is seq:
                     self._release(seq)
         for cut, seqs in w.lane_seqs.items():
             done.extend(self._lanes[cut].harvest(seqs, w.lane_toks[cut], self.round))
+        if self.obs is not None:
+            self._obs_window_close(w, done)
         return done
 
     def drain(self, max_rounds: int = 10_000) -> List[ChunkResult]:
@@ -745,6 +904,7 @@ class _SplitSeq:
     edge_cache: object       # dense per-robot edge-prefix caches (batch 1)
     tokens: List[int] = field(default_factory=list)
     dead: bool = False       # cancelled while its scan window was in flight
+    admit_ts: float = 0.0    # obs.clock at batched-prefill admission
 
 
 class _SplitLane:
@@ -1004,6 +1164,8 @@ class _SplitLane:
                         kind="split",
                         pool=sched.pool_stats(),
                         cut=self.cut,
+                        submitted_ts=seq.request.submit_ts,
+                        admitted_ts=seq.admit_ts,
                     ))
         return done
 
@@ -1038,6 +1200,8 @@ class _SplitLane:
                     kind="split",
                     pool=sched.pool_stats(),
                     cut=self.cut,
+                    submitted_ts=seq.request.submit_ts,
+                    admitted_ts=seq.admit_ts,
                 ))
         for seq in seqs:
             if seq.dead and self.seqs.get(seq.row) is seq:

@@ -256,3 +256,62 @@ def test_score_trace_reuse_redundant_replay_stays_accurate():
     res = score_trace(ep, trace, EngineConfig(), local_src="reuse")
     assert res.accuracy > 0.95, "redundant replay must track the reference"
     assert res.counters.n_offloads == 1  # the bootstrap fetch only
+
+
+def test_telemetry_summary_json_roundtrip():
+    """summary() is plain JSON (the --assign-cuts episode handoff record)."""
+
+    import json
+
+    tel = FleetTelemetry(2, record_streams=True)
+    tel.observe(_decision([True, False], [False, True]))
+    tel.observe(_decision([False, True], [True, False]))
+    tel.note_cancel(0)
+    tel.note_completion(1)
+    tel.note_boundary(1.5)
+    tel.note_boundary(2.5)
+    s = tel.summary()
+    assert json.loads(json.dumps(s)) == s
+    assert s["ticks"] == 2
+    assert s["fires"] == [1, 1] and s["replays"] == [1, 1]
+    assert s["cancels"] == [1, 0] and s["completions"] == [0, 1]
+    assert s["scan_windows"] == 2 and s["host_gap_ms"] == 2.0
+    assert s["fleet_offload_fraction"] == 0.5
+
+
+def test_telemetry_host_gap_zero_boundaries():
+    """No scan windows crossed: host_gap_ms is 0.0, never a nan mean."""
+
+    tel = FleetTelemetry(1)
+    assert tel.host_gap_ms() == 0.0
+    assert tel.scan_windows == 0
+    assert tel.summary()["host_gap_ms"] == 0.0
+
+
+def test_telemetry_obs_hook_feeds_registry():
+    """With an Observability handle attached, decision counters and the
+    per-boundary host gap land in the shared registry (fleet.* counters,
+    serve.host_gap_ms) AND in the numpy-side per-robot arrays — one event
+    stream, two consistent views."""
+
+    from repro.obs import Observability
+
+    obs = Observability(trace=False)
+    tel = FleetTelemetry(2, obs=obs)
+    tel.observe(_decision([True, False], [False, True], pre=[False, True]))
+    tel.observe(_decision([True, True], [False, False]))
+    tel.note_cancel(1)
+    tel.note_completion(0)
+    tel.note_completion(1)
+    tel.note_boundary(3.0)
+    m = obs.metrics
+    assert m.get("fleet.ticks").value == tel.ticks == 2
+    assert m.get("fleet.fires").value == int(tel.fires.sum()) == 3
+    assert m.get("fleet.replays").value == int(tel.replays.sum()) == 1
+    assert m.get("fleet.preempts").value == int(tel.preempts.sum()) == 1
+    assert m.get("fleet.cancels").value == int(tel.cancels.sum()) == 1
+    assert m.get("fleet.completions").value == int(tel.completions.sum()) == 2
+    gap = m.get("serve.host_gap_ms")
+    assert gap.count == 1 and gap.vmax == 3.0
+    # without the handle nothing is registered (zero-cost default)
+    assert FleetTelemetry(1).obs is None

@@ -955,3 +955,148 @@ def test_pipelined_lane_matches_serial_pingpong(f32_stack):
     assert serial.keys() == pipelined.keys()
     for r in serial:
         np.testing.assert_array_equal(serial[r], pipelined[r], err_msg=f"robot {r}")
+
+
+# ---------------------------------------------------------------------------
+# observability acceptance: tracing is transparent, spans nest, SLO is pinned
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def obs_fleet(stack):
+    """One mixed-cut fleet (cuts {1, 2} + cloud-only robots, scan_rounds=4)
+    served twice under identical kwargs — obs off, then obs on with
+    tracing — shared by the observability acceptance tests."""
+
+    from repro.obs import Observability
+    from repro.partition.executor import PartitionExecutor
+
+    _, model, params, tok = stack
+    ex = PartitionExecutor(model, params, cut_layer=1)
+    kw = dict(n_robots=4, max_steps=60, max_slots=2, partition_executor=ex,
+              robot_cuts={1: 1, 2: 2, 3: 1}, scan_rounds=4, verbose=False)
+    off = serve_fleet(model, params, tok, **kw)
+    obs = Observability(trace=True)
+    on = serve_fleet(model, params, tok, obs=obs, **kw)
+    return off, on, obs
+
+
+def test_obs_is_transparent_to_serving(obs_fleet):
+    """Instrumentation must not change what gets served: byte-identical
+    actions and the same window count with obs on vs off (no syncs added
+    inside scan windows, no extra boundaries)."""
+
+    off, on, _ = obs_fleet
+    np.testing.assert_array_equal(off["actions"], on["actions"])
+    assert off["scan_windows"] == on["scan_windows"] > 0
+    assert off["decode_rounds"] == on["decode_rounds"]
+    assert off["hetero_rounds"] == on["hetero_rounds"] > 0
+    assert off["slo"] is None and on["slo"] is not None
+
+
+def _lifecycle_spans(trace):
+    """Ordered (track, name, ts_us, end_us, args) X-spans from a trace."""
+
+    obj = trace.to_chrome()
+    tracks = {ev["tid"]: ev["args"]["name"] for ev in obj["traceEvents"]
+              if ev.get("ph") == "M" and ev["name"] == "thread_name"}
+    return [
+        (tracks[ev["tid"]], ev["name"], ev["ts"], ev["ts"] + ev["dur"],
+         ev.get("args", {}))
+        for ev in obj["traceEvents"] if ev.get("ph") == "X"
+    ]
+
+
+def test_trace_spans_nest_and_align_to_window_closes(obs_fleet):
+    """Every completed request's trace triple nests (queue ⊂ chunk
+    lifetime, decode tail-aligned), and each decode span ends exactly at
+    a window-close timestamp on the lane that served it (<1us)."""
+
+    from repro.obs import validate_chrome_trace
+
+    _, _, obs = obs_fleet
+    n, errors = validate_chrome_trace(obs.trace.to_chrome())
+    assert errors == [] and n > 0
+    spans = _lifecycle_spans(obs.trace)
+    window_close = {}  # lane track -> list of window-end timestamps (us)
+    for track, name, _, end, _ in spans:
+        if track.startswith("lane "):
+            window_close.setdefault(track, []).append(end)
+    # all three lane kinds decoded: the shared cloud batch + both cuts
+    assert set(window_close) >= {"lane cloud", "lane cut=1", "lane cut=2"}
+
+    triples = [
+        spans[i:i + 3] for i, s in enumerate(spans) if s[1] == "chunk"
+    ]
+    assert triples, "no request lifecycles recorded"
+    for chunk, queue, decode in triples:
+        track = chunk[0]
+        assert queue[1] == "queue" and decode[1] == "decode"
+        assert queue[0] == track and decode[0] == track
+        # nesting: queue starts the lifetime, decode closes it
+        assert queue[2] == chunk[2]                  # both start at submit
+        assert chunk[2] <= queue[3] <= chunk[3]      # queue inside lifetime
+        assert abs(decode[2] - queue[3]) < 1.0       # decode starts at admit
+        assert abs(decode[3] - chunk[3]) < 1.0       # decode ends the chunk
+        # the decode end is a window close on the request's own lane
+        cut = chunk[4].get("cut")
+        lane = "lane cloud" if cut is None else f"lane cut={cut}"
+        assert min(abs(decode[3] - w) for w in window_close[lane]) < 1.0, (
+            f"{track} decode end not a window boundary on {lane}"
+        )
+
+
+def test_slo_percentiles_pinned_by_trace_timestamps(obs_fleet):
+    """The SLO report's p50/p99 chunk latency must sit in the same log2
+    bucket as the exact nearest-rank percentile recomputed from the raw
+    per-request trace spans — the histogram never drifts off the trace."""
+
+    import math as _math
+
+    from repro.obs.histogram import bucket_index
+
+    _, on, obs = obs_fleet
+    durs = sorted(
+        (end - ts) / 1e3  # us -> ms
+        for _, name, ts, end, _ in _lifecycle_spans(obs.trace)
+        if name == "chunk"
+    )
+    hist = obs.metrics.get("serve.chunk_latency_ms")
+    assert hist.count == len(durs) > 0  # one span per completion, no drops
+    slo = on["slo"]["chunk_latency_ms"]
+    assert slo["count"] == len(durs)
+    for q, key in ((0.50, "p50"), (0.99, "p99")):
+        exact = durs[max(1, _math.ceil(q * len(durs))) - 1]
+        est = hist.quantile(q)
+        assert bucket_index(est) == bucket_index(exact), (key, est, exact)
+        assert slo[key] == pytest.approx(est, abs=1e-4)  # json is rounded
+    # the exact moments agree with the raw spans too
+    assert hist.mean == pytest.approx(sum(durs) / len(durs), rel=1e-6)
+    assert hist.vmax == pytest.approx(durs[-1], rel=1e-6)
+    # registry saw the decision core and the pool through the same handle
+    assert on["slo"]["completions"] == len(durs)
+    assert on["slo"]["pool_high_water"] > 0
+    assert obs.metrics.get("fleet.ticks").value > 0
+
+
+def test_scheduler_reset_gives_per_episode_high_water(stack):
+    """scheduler.reset() (the --assign-cuts episode boundary) reclaims the
+    pool and re-arms high_water so episode 2 reports its own KV pressure;
+    lifetime alloc/free counters keep counting across the boundary."""
+
+    _, model, params, tok = stack
+    sched = ContinuousBatchingScheduler(model, params, tok, max_slots=2)
+    rng = np.random.default_rng(21)
+    sched.submit(0, *_obs(rng))
+    sched.submit(1, *_obs(rng))
+    sched.drain()
+    alloc = sched.allocator
+    hw1, allocs1 = alloc.high_water, alloc.total_allocs
+    assert hw1 > 0 and allocs1 > 0 and alloc.total_frees == allocs1
+    sched.reset()
+    assert alloc.high_water == 0 and alloc.num_in_use == 0
+    assert alloc.total_allocs == allocs1  # lifetime counters not reset
+    sched.submit(2, *_obs(rng))
+    sched.drain()
+    assert 0 < alloc.high_water <= hw1  # episode-2's own pressure
+    assert alloc.total_allocs > allocs1
