@@ -44,6 +44,19 @@ def main(argv=None) -> None:
     # paged engine: slot-bounded vs page-bounded admission concurrency
     _timed("paged_engine_concurrency", serving_bench.bench_paged_rows, detail)
 
+    # fleet-scale serving: vectorized tick vs the legacy per-robot loop
+    # (host overhead), CI-smoke fleet size to keep the harness run bounded
+    from benchmarks import fleet_bench
+
+    def _fleet():
+        rows, out = fleet_bench.bench_tick_rows(n_robots=256, steps=40)
+        fleet_bench._update_json(
+            __file__.replace("run.py", "../BENCH_fleet.json"), out
+        )
+        return rows, round(out["tick_speedup"], 2)
+
+    _timed("fleet_tick_speedup_256", _fleet, detail)
+
     # closed-loop redundancy-aware fleet vs always-offload (live engine)
     from benchmarks import trigger_bench
 

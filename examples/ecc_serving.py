@@ -27,8 +27,16 @@ its own cut from a small frontier (high-redundancy robots get deeper edge
 prefixes), and episode 2 serves the fleet with per-robot cuts — several
 distinct cuts decode in the same scheduler rounds against one KV page pool.
 
+With ``--arrivals poisson|bursty`` the fleet is served through the
+trace-driven harness instead: robots join at sampled arrival ticks, dwell
+for an exponential episode length, and leave — in-flight work is cancelled
+and KV pages are reclaimed without an engine reset.  The serving tick is
+the vectorized array-at-a-time path (``--tick legacy`` switches the flat
+fleet back to the per-robot loop for comparison).
+
     PYTHONPATH=src python examples/ecc_serving.py --task drawer_open
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4
+    PYTHONPATH=src python examples/ecc_serving.py --fleet 64 --arrivals poisson
     PYTHONPATH=src python examples/ecc_serving.py --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 4 --partition auto --network lan
     PYTHONPATH=src python examples/ecc_serving.py --fleet 6 --trigger rapid --assign-cuts
@@ -62,6 +70,15 @@ def main(argv=None):
                    help="channel regime the partition planner prices")
     p.add_argument("--paged", action="store_true",
                    help="single-robot decode through the paged KV substrate")
+    p.add_argument("--arrivals", default=None, choices=["poisson", "bursty"],
+                   help="serve --fleet N through the trace-driven churn "
+                        "harness (robots join/leave mid-run) instead of a "
+                        "fixed fleet")
+    p.add_argument("--mean-dwell", type=float, default=240.0,
+                   help="mean episode dwell in ticks for --arrivals runs")
+    p.add_argument("--tick", default="vectorized",
+                   choices=["vectorized", "legacy"],
+                   help="fixed-fleet serving tick implementation")
     p.add_argument("--trigger", default="always", choices=["always", "rapid"],
                    help="fleet dispatch policy: always-offload or the "
                         "closed-loop redundancy-aware RAPID trigger")
@@ -94,6 +111,42 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     tok = EpisodeTokenizer(cfg.vocab_size)
 
+    if args.fleet and args.arrivals:
+        # trace-driven churn harness: robots join, dwell, and leave; the
+        # engine reclaims their pages without a reset between episodes
+        from repro.obs import Observability
+        from repro.partition.planner import NETWORK_PROFILES
+        from repro.runtime.fleet import make_trace, serve_trace
+
+        trace = make_trace(
+            args.fleet, args.steps, args.arrivals,
+            mean_dwell=args.mean_dwell, seed=0,
+        )
+        obs = Observability(trace=False) if args.metrics_json else None
+        out = serve_trace(
+            model, params, tok, trace, args.steps,
+            trigger=args.trigger,
+            channel=NETWORK_PROFILES[args.network],
+            scan_rounds=args.scan_rounds, obs=obs,
+        )
+        print(f"churn: {out['joined']} joined, {out['left']} left early "
+              f"({out['churn_cancels']} in-flight cancels), peak "
+              f"{out['peak_active_robots']} active robots")
+        print(f"served {out['completions']} chunks at "
+              f"{out['ticks_per_s']:.1f} ticks/s")
+        if out["slo"] is not None:
+            p99 = out["slo"]["chunk_latency_ms"]["p99"]
+            print(f"chunk latency p99: {p99:.1f} ms")
+        print(f"kv pages: high-water {out['pool'].high_water}, "
+              f"in use after drain {out['pool'].pages_in_use}")
+        if args.metrics_json:
+            import json
+
+            with open(args.metrics_json, "w") as f:
+                json.dump(obs.metrics.to_json(), f, indent=1)
+            print(f"metrics: -> {args.metrics_json}")
+        return
+
     if args.fleet:
         from repro.launch.serve import plan_fleet_partition
         from repro.obs import Observability
@@ -125,7 +178,7 @@ def main(argv=None):
                 channel=NETWORK_PROFILES[args.network],
                 partition_executor=executor, split_robots=split,
                 trigger=args.trigger, defer_hot_admission=args.defer_hot,
-                scan_rounds=args.scan_rounds, obs=mk_obs(),
+                scan_rounds=args.scan_rounds, obs=mk_obs(), tick=args.tick,
             )
         if args.assign_cuts:
             # close the loop heterogeneously: per-robot cuts from episode
@@ -145,6 +198,7 @@ def main(argv=None):
                     trigger=args.trigger,
                     defer_hot_admission=args.defer_hot,
                     scan_rounds=args.scan_rounds, obs=mk_obs(),
+                    tick=args.tick,
                 )
                 print(f"episode 2 robot cuts: {out['robot_cuts']} "
                       f"({len(out['active_cuts'])} distinct; "

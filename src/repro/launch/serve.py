@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,11 @@ from repro.models.model import Model
 from repro.obs import Observability, build_slo_report
 from repro.obs.clock import clock
 from repro.robotics.episodes import generate_episode
-from repro.runtime.channel import ChannelConfig, sample_latency_ms
+from repro.runtime.channel import (
+    ChannelConfig,
+    sample_latency_ms,
+    sample_latency_ms_batch,
+)
 from repro.runtime.policy import FleetTelemetry, PolicyConfig
 from repro.runtime import policy as rpolicy
 
@@ -224,6 +228,7 @@ def serve_fleet(
     trigger_cfg: Optional[TriggerConfig] = None,
     record_streams: bool = False,
     obs: Optional[Observability] = None,
+    tick: str = "vectorized",
     verbose: bool = True,
 ):
     """A robot fleet served by one continuous-batching cloud engine.
@@ -285,12 +290,33 @@ def serve_fleet(
     run's ``SLOReport`` is printed (verbose) and returned under ``"slo"``.
     Decoded actions are byte-identical with and without ``obs`` — no extra
     host↔device syncs are introduced.
+
+    ``tick`` selects the serving-tick implementation:
+
+      * ``"vectorized"`` (default) — array-at-a-time ticks: episode frames
+        pre-stacked to ``(T, R, N)`` and sliced per tick, one
+        ``submit_batch``/``cancel_batch`` scheduler call per tick,
+        ``in_flight``/split/defer bookkeeping as boolean/int arrays, one
+        batched ``decode_action`` and one batched jitter draw per harvest.
+        Host tick overhead is O(triggered robots) numpy work, not O(fleet)
+        Python — this is what serves 1k+ robots per host.
+      * ``"legacy"`` — the original per-robot Python loop (per-tick
+        ``np.stack`` over episode lists, per-robot ``submit``/``cancel``, a
+        Python ``in_flight`` set, per-result completion handling).  Kept as
+        the bit-for-bit parity reference and the baseline that
+        ``benchmarks/fleet_bench.py`` measures the tick speedup against.
+
+    Both paths produce bit-identical actions, telemetry counters, decision
+    streams, and latency samples (f32 decode; threefry jitter draws are
+    deterministic per (robot, ordinal) lane).
     """
 
     from repro.runtime.scheduler import ContinuousBatchingScheduler
 
     if trigger not in ("always", "rapid"):
         raise ValueError(f"trigger must be 'always' or 'rapid', got {trigger!r}")
+    if tick not in ("vectorized", "legacy"):
+        raise ValueError(f"tick must be 'vectorized' or 'legacy', got {tick!r}")
     all_tasks = tasks or ["pick_place", "drawer_open", "peg_insertion"]
     eps = [
         generate_episode(all_tasks[i % len(all_tasks)], seed=seed + i)
@@ -348,74 +374,195 @@ def serve_fleet(
     offload_ms: List[float] = []
     offload_ms_by_robot: List[List[float]] = [[] for _ in range(n_robots)]
     rows = np.arange(n_robots)
+    # host-overhead accounting: per-tick wall decomposes into the jitted
+    # decision core (dispatch + forcing its outputs to host), the engine's
+    # ``sched.step`` (prefill + decode windows), and everything else — the
+    # HOST tick overhead (frame building, trigger bookkeeping, submits,
+    # harvest handling) that the vectorized tick turns into array ops.
+    # ``sched.step`` was already clocked per tick for boundary telemetry,
+    # so only the core timer adds clock reads (two per tick, both paths).
+    core_s = 0.0
+    engine_s = 0.0
     t_start = clock()
 
-    for t in range(t_len):
-        frame = KinematicFrame(
-            q=jnp.asarray(np.stack([ep.q[t] for ep in eps])),
-            qd=jnp.asarray(np.stack([ep.qd[t] for ep in eps])),
-            tau=jnp.asarray(np.stack([ep.tau[t] for ep in eps])),
-        )
-        state, dec = step_fn(state, frame)
-        telemetry.observe(dec)
-        # execute before this round's completions land: a chunk arriving in
-        # round t is first executable at t+1, exactly as the dispatcher did
-        actions[t] = cached[rows, np.asarray(dec.slot)]
-        trig = np.asarray(dec.offload)
-        pre = np.asarray(dec.preempt)
-        for r in np.flatnonzero(trig):
-            r = int(r)
-            if r in in_flight:
-                if trigger != "rapid":
-                    continue  # previous request still decoding; keep executing
-                # contact-phase preemption: the stale in-flight sequence is
-                # cancelled mid-decode and the fresh observation takes over
-                if sched.cancel(r):
-                    telemetry.note_cancel(r)
-                in_flight.discard(r)
-            # cancellation-aware admission: a preempting robot whose trigger
-            # is running hot gets its admission (not its queue slot) held
-            # one round, so an immediate re-fire cancels a queued request
-            # instead of a paid batched prefill
-            defer = int(
-                defer_hot_admission is not None
-                and bool(pre[r])
-                and telemetry.preempts[r] / max(int(telemetry.fires[r]), 1)
-                >= defer_hot_admission
+    if tick == "legacy":
+        # The original per-robot serving loop, preserved verbatim (including
+        # its per-tick ``np.stack`` over episode lists) as the parity
+        # reference and the fleet-tick benchmark baseline.
+        for t in range(t_len):
+            frame = KinematicFrame(
+                q=jnp.asarray(np.stack([ep.q[t] for ep in eps])),
+                qd=jnp.asarray(np.stack([ep.qd[t] for ep in eps])),
+                tau=jnp.asarray(np.stack([ep.tau[t] for ep in eps])),
             )
-            sched.submit(
-                r, eps[r].qd[t][None], eps[r].tau[t][None],
-                partitioned=r in split_set,
-                cut=robot_cuts.get(r),
-                defer_rounds=defer,
+            c0 = clock()
+            state, dec = step_fn(state, frame)
+            trig = np.asarray(dec.offload)
+            pre = np.asarray(dec.preempt)
+            slot = np.asarray(dec.slot)
+            core_s += clock() - c0
+            telemetry.observe(dec)
+            # execute before this round's completions land: a chunk arriving
+            # in round t is first executable at t+1, as the dispatcher did
+            actions[t] = cached[rows, slot]
+            for r in np.flatnonzero(trig):
+                r = int(r)
+                if r in in_flight:
+                    if trigger != "rapid":
+                        continue  # previous request still decoding
+                    # contact-phase preemption: the stale in-flight sequence
+                    # is cancelled mid-decode and the fresh obs takes over
+                    if sched.cancel(r):
+                        telemetry.note_cancel(r)
+                    in_flight.discard(r)
+                # cancellation-aware admission: a preempting robot whose
+                # trigger is running hot gets its admission (not its queue
+                # slot) held one round, so an immediate re-fire cancels a
+                # queued request instead of a paid batched prefill
+                defer = int(
+                    defer_hot_admission is not None
+                    and bool(pre[r])
+                    and telemetry.preempts[r] / max(int(telemetry.fires[r]), 1)
+                    >= defer_hot_admission
+                )
+                sched.submit(
+                    r, eps[r].qd[t][None], eps[r].tau[t][None],
+                    partitioned=r in split_set,
+                    cut=robot_cuts.get(r),
+                    defer_rounds=defer,
+                )
+                in_flight.add(r)
+                n_off[r] += 1
+            prev_windows = sched.windows
+            t0 = clock()
+            results = sched.step()
+            step_s = clock() - t0
+            engine_s += step_s
+            if sched.windows > prev_windows:
+                telemetry.note_boundary(step_s * 1e3)
+            for res in results:
+                cached[res.robot_id] = tokenizer.decode_action(
+                    res.tokens
+                ).reshape(chunk_len, n_joints)
+                in_flight.discard(res.robot_id)
+                telemetry.note_completion(res.robot_id)
+                wait_rounds.append(res.completed_round - res.submitted_round)
+                rkey = jax.random.fold_in(
+                    jax.random.fold_in(net_key, res.robot_id),
+                    len(offload_ms_by_robot[res.robot_id]),
+                )
+                ms = sample_latency_ms(channel, chunk_len, rkey)
+                offload_ms.append(ms)
+                offload_ms_by_robot[res.robot_id].append(ms)
+    else:
+        # Vectorized fleet tick: frames are slices of (T, R, N) arrays
+        # stacked once, trigger bookkeeping lives in [R] boolean/int arrays,
+        # and each tick makes at most one cancel_batch + one submit_batch
+        # scheduler call and one batched decode/jitter call per harvest.
+        # Every step below is the array-at-a-time image of the legacy loop:
+        # cancels land before submits within a tick (cancel only touches
+        # that robot's own request, so all-cancels-then-all-submits in
+        # ascending robot order leaves the queues, the global FIFO ``order``
+        # stamps, and the telemetry counters identical to the interleaved
+        # per-robot sequence).
+        q_all = np.stack([ep.q[:t_len] for ep in eps], axis=1)
+        qd_all = np.stack([ep.qd[:t_len] for ep in eps], axis=1)
+        tau_all = np.stack([ep.tau[:t_len] for ep in eps], axis=1)
+        in_flight_mask = np.zeros(n_robots, bool)
+        split_mask = np.zeros(n_robots, bool)
+        cut_arr = np.full(n_robots, -1, np.int64)
+        for r, c in robot_cuts.items():
+            split_mask[r] = True
+            cut_arr[r] = c
+        # per-robot offload ordinal == len(offload_ms_by_robot[r]); kept as
+        # an array so the jitter keys batch without touching the lists
+        n_done = np.zeros(n_robots, np.int64)
+        for t in range(t_len):
+            frame = KinematicFrame(
+                q=jnp.asarray(q_all[t]),
+                qd=jnp.asarray(qd_all[t]),
+                tau=jnp.asarray(tau_all[t]),
             )
-            in_flight.add(r)
-            n_off[r] += 1
-        prev_windows = sched.windows
-        t0 = clock()
-        results = sched.step()
-        step_ms = (clock() - t0) * 1e3
-        if sched.windows > prev_windows:
-            telemetry.note_boundary(step_ms)
-        for res in results:
-            cached[res.robot_id] = tokenizer.decode_action(
-                res.tokens
-            ).reshape(chunk_len, n_joints)
-            in_flight.discard(res.robot_id)
-            telemetry.note_completion(res.robot_id)
-            wait_rounds.append(res.completed_round - res.submitted_round)
-            rkey = jax.random.fold_in(
-                jax.random.fold_in(net_key, res.robot_id),
-                len(offload_ms_by_robot[res.robot_id]),
-            )
-            ms = sample_latency_ms(channel, chunk_len, rkey)
-            offload_ms.append(ms)
-            offload_ms_by_robot[res.robot_id].append(ms)
+            c0 = clock()
+            state, dec = step_fn(state, frame)
+            trig = np.asarray(dec.offload)
+            pre = np.asarray(dec.preempt)
+            slot = np.asarray(dec.slot)
+            core_s += clock() - c0
+            telemetry.observe(dec)
+            # execute before this round's completions land: a chunk arriving
+            # in round t is first executable at t+1, as the dispatcher did
+            actions[t] = cached[rows, slot]
+            if trigger == "rapid":
+                # contact-phase preemption, batched: every firing robot with
+                # stale in-flight work cancels before the fresh submit
+                cancel_ids = np.flatnonzero(trig & in_flight_mask)
+                if cancel_ids.size:
+                    hits = sched.cancel_batch(cancel_ids)
+                    telemetry.note_cancels(cancel_ids[hits])
+                    in_flight_mask[cancel_ids] = False
+                ids = np.flatnonzero(trig)
+            else:
+                # "always": fires landing while a request is in flight are
+                # skipped (the legacy loop's ``continue``)
+                ids = np.flatnonzero(trig & ~in_flight_mask)
+            if ids.size:
+                defer = None
+                if defer_hot_admission is not None:
+                    # cancellation-aware admission (see the legacy branch),
+                    # as one vectorized preempt-rate comparison
+                    defer = (
+                        pre[ids]
+                        & (
+                            telemetry.preempts[ids]
+                            / np.maximum(telemetry.fires[ids], 1)
+                            >= defer_hot_admission
+                        )
+                    ).astype(np.int64)
+                sched.submit_batch(
+                    ids, qd_all[t][ids], tau_all[t][ids],
+                    partitioned=split_mask[ids],
+                    cuts=cut_arr[ids],
+                    defer_rounds=defer,
+                )
+                in_flight_mask[ids] = True
+                n_off[ids] += 1
+            prev_windows = sched.windows
+            t0 = clock()
+            results = sched.step()
+            step_s = clock() - t0
+            engine_s += step_s
+            if sched.windows > prev_windows:
+                telemetry.note_boundary(step_s * 1e3)
+            if results:
+                # at most one outstanding request per robot, so a harvest
+                # never carries duplicate robot ids — batched scatter is safe
+                res_ids = np.fromiter(
+                    (res.robot_id for res in results), np.int64,
+                    count=len(results),
+                )
+                toks = np.stack([res.tokens for res in results])
+                cached[res_ids] = tokenizer.decode_action(toks).reshape(
+                    len(results), chunk_len, n_joints
+                )
+                in_flight_mask[res_ids] = False
+                telemetry.note_completions(res_ids)
+                wait_rounds.extend(
+                    res.completed_round - res.submitted_round for res in results
+                )
+                ms = sample_latency_ms_batch(
+                    channel, chunk_len, net_key, res_ids, n_done[res_ids]
+                )
+                n_done[res_ids] += 1
+                offload_ms.extend(ms)
+                for i, r in enumerate(res_ids):
+                    offload_ms_by_robot[r].append(ms[i])
 
+    wall_s = clock() - t_start
     pool = sched.pool_stats()
     slo = None
     if obs is not None:
-        obs.metrics.gauge("serve.wall_s").set(clock() - t_start)
+        obs.metrics.gauge("serve.wall_s").set(wall_s)
         slo = build_slo_report(obs.metrics)
     if verbose:
         print(
@@ -449,6 +596,12 @@ def serve_fleet(
         "obs": obs,
         "offloads": n_off,
         "steps": t_len,
+        "wall_s": wall_s,
+        # wall decomposition: jitted decision core, engine (sched.step), and
+        # host orchestration — the serving-tick overhead around both
+        "core_s": core_s,
+        "engine_s": engine_s,
+        "host_s": max(wall_s - core_s - engine_s, 0.0),
         "actions": actions,
         "service_rounds": wait_rounds,
         "offload_ms": offload_ms,

@@ -50,5 +50,49 @@ def sample_latency_ms(cfg: ChannelConfig, chunk_len: int, key) -> float:
     return base + float(jax.random.exponential(key)) * cfg.jitter_ms
 
 
+_JITTER_FN = None
+
+
+def _jitter_fn():
+    """Jitted vmap of the per-(robot, ordinal) exponential draw, built lazily."""
+
+    global _JITTER_FN
+    if _JITTER_FN is None:
+        import jax
+
+        _JITTER_FN = jax.jit(
+            jax.vmap(
+                lambda key, r, o: jax.random.exponential(
+                    jax.random.fold_in(jax.random.fold_in(key, r), o)
+                ),
+                in_axes=(None, 0, 0),
+            )
+        )
+    return _JITTER_FN
+
+
+def sample_latency_ms_batch(cfg: ChannelConfig, chunk_len: int, key, robot_ids, ordinals):
+    """Batched ``sample_latency_ms``: one draw per (robot, ordinal) pair.
+
+    Folds ``robot`` then ``ordinal`` into ``key`` exactly like the serial
+    path; threefry is deterministic per lane under ``vmap``, so element ``i``
+    is bit-identical to
+    ``sample_latency_ms(cfg, chunk_len, fold_in(fold_in(key, r_i), o_i))``.
+    One jitted dispatch replaces three per draw.  Returns a list of floats.
+    """
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    n = len(robot_ids)
+    if n == 0:
+        return []
+    base = query_latency_ms(cfg, chunk_len)
+    excess = np.asarray(
+        _jitter_fn()(key, jnp.asarray(robot_ids, jnp.int32), jnp.asarray(ordinals, jnp.int32))
+    )
+    return [base + float(e) * cfg.jitter_ms for e in excess]
+
+
 def bandwidth_bytes_per_episode(cfg: ChannelConfig, n_offloads: int, chunk_len: int) -> int:
     return n_offloads * (cfg.obs_bytes + chunk_len * cfg.per_action_bytes)

@@ -283,6 +283,16 @@ class FleetTelemetry:
         if self.obs is not None:
             self.obs.metrics.counter("fleet.cancels").inc()
 
+    def note_cancels(self, robot_ids) -> None:
+        """Batched ``note_cancel``: one scatter-add + one counter bump."""
+
+        robot_ids = np.asarray(robot_ids, np.int64)
+        if robot_ids.size == 0:
+            return
+        np.add.at(self.cancels, robot_ids, 1)
+        if self.obs is not None:
+            self.obs.metrics.counter("fleet.cancels").inc(int(robot_ids.size))
+
     def note_boundary(self, host_ms: float) -> None:
         """One scan-window boundary crossed; ``host_ms`` is its host gap."""
 
@@ -300,6 +310,16 @@ class FleetTelemetry:
         self.completions[robot_id] += 1
         if self.obs is not None:
             self.obs.metrics.counter("fleet.completions").inc()
+
+    def note_completions(self, robot_ids) -> None:
+        """Batched ``note_completion``: one scatter-add + one counter bump."""
+
+        robot_ids = np.asarray(robot_ids, np.int64)
+        if robot_ids.size == 0:
+            return
+        np.add.at(self.completions, robot_ids, 1)
+        if self.obs is not None:
+            self.obs.metrics.counter("fleet.completions").inc(int(robot_ids.size))
 
     def streams(self) -> Dict[str, np.ndarray]:
         """[T, R] decision streams (requires ``record_streams=True``)."""

@@ -378,6 +378,85 @@ class ContinuousBatchingScheduler:
                     return True
         return False
 
+    def submit_batch(
+        self, robot_ids, qd: np.ndarray, tau: np.ndarray,
+        partitioned=None, cuts=None, defer_rounds=None,
+    ) -> None:
+        """Queue chunk requests for many robots in one call (qd/tau [n, N]).
+
+        Row ``i`` of ``qd``/``tau`` belongs to ``robot_ids[i]``; FIFO order
+        follows row order, so the queue state after this call is identical
+        to ``n`` serial ``submit`` calls in the same order (same global
+        ``order`` stamps, same lanes, same ``earliest_round``).  The state
+        encode is one vectorized call over the whole batch instead of one
+        per robot — ``EpisodeTokenizer.encode_state`` is elementwise, so
+        each row matches the serial encode bit-for-bit.
+
+        ``partitioned`` is an optional [n] bool mask, ``cuts`` an optional
+        [n] int array (entries < 0 mean "no cut given" — legal only while a
+        single lane is attached), ``defer_rounds`` an optional [n] int
+        array.  Obs stamping uses one ``clock()`` read for the whole batch;
+        serial submits read it per request (the stamps feed wait
+        histograms, not the decode path, so results stay byte-identical).
+        """
+
+        robot_ids = np.asarray(robot_ids, np.int64)
+        n = int(robot_ids.shape[0])
+        if n == 0:
+            return
+        obs_toks = np.concatenate(
+            [self.tok.encode_state(np.asarray(qd)), self.tok.encode_state(np.asarray(tau))],
+            axis=1,
+        )
+        part = (
+            np.zeros(n, bool) if partitioned is None
+            else np.asarray(partitioned, bool)
+        )
+        defer = (
+            np.zeros(n, np.int64) if defer_rounds is None
+            else np.asarray(defer_rounds, np.int64)
+        )
+        cut_arr = None if cuts is None else np.asarray(cuts, np.int64)
+        ts = 0.0
+        if self.obs is not None:
+            ts = clock()
+            m = self.obs.metrics
+            m.counter("sched.submissions").inc(n)
+            n_deferred = int((defer > 0).sum())
+            if n_deferred:
+                m.counter("sched.deferred").inc(n_deferred)
+        for i in range(n):
+            self._order += 1
+            d = int(defer[i])
+            req = ChunkRequest(
+                int(robot_ids[i]), obs_toks[i], self.round, order=self._order,
+                earliest_round=self.round + d + 1 if d > 0 else 0,
+                submit_ts=ts,
+            )
+            if d > 0:
+                self.deferred += 1
+            if part[i]:
+                cut = None
+                if cut_arr is not None and cut_arr[i] >= 0:
+                    cut = int(cut_arr[i])
+                self._lane_for(cut).queue.append(req)
+            else:
+                self._queue.append(req)
+
+    def cancel_batch(self, robot_ids) -> np.ndarray:
+        """Cancel many robots' queued/in-flight requests; returns a bool mask.
+
+        Element ``i`` is ``cancel(robot_ids[i])`` — cancellation is inherently
+        per-sequence bookkeeping (queue removal or dead-marking inside the
+        dispatched window), so this is a batched entry point over the same
+        state machine, in ascending-row order.
+        """
+
+        return np.fromiter(
+            (self.cancel(int(r)) for r in np.asarray(robot_ids)),
+            dtype=bool, count=len(np.asarray(robot_ids)),
+        )
+
     @property
     def n_pending(self) -> int:
         return len(self._queue) + sum(len(l.queue) for l in self._lanes.values())
