@@ -43,6 +43,11 @@ def main(argv=None) -> None:
     )
     # paged engine: slot-bounded vs page-bounded admission concurrency
     _timed("paged_engine_concurrency", serving_bench.bench_paged_rows, detail)
+    # mesh-sharded decode parity + trajectory (skips on one host device)
+    _timed(
+        "sharded_decode",
+        lambda: serving_bench.bench_sharded_rows()[:2], detail,
+    )
 
     # fleet-scale serving: vectorized tick vs the legacy per-robot loop
     # (host overhead), CI-smoke fleet size to keep the harness run bounded

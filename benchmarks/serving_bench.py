@@ -197,13 +197,26 @@ def _slo_fields(prefix: str, obs) -> dict:
     }
 
 
+def _round(v):
+    """round() for merged values that may be lists or non-numeric (e.g. the
+    per-shard high-water list, backend strings)."""
+
+    if isinstance(v, bool):
+        return v
+    if isinstance(v, (int, float)):
+        return round(v, 3)
+    if isinstance(v, (list, tuple)):
+        return [_round(e) for e in v]
+    return v
+
+
 def _update_json(path, out):
     path = os.path.abspath(path)
     merged = {}
     if os.path.exists(path):
         with open(path) as f:
             merged = json.load(f)
-    merged.update({k: round(v, 3) for k, v in out.items()})
+    merged.update({k: _round(v) for k, v in out.items()})
     with open(path, "w") as f:
         json.dump(merged, f, indent=2)
 
@@ -264,6 +277,96 @@ def bench_paged_rows():
     return rows, round(speedup, 2)
 
 
+def bench_sharded_rows():
+    """Mesh-sharded decode vs single-device on the same 16-request burst.
+
+    Needs more than one host device (CI forces eight via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a single
+    device the row reports ``sharded_devices=1`` and skips.  The CI gate is
+    **parity** (f32, bit-exact tokens request-for-request), not the speedup:
+    on a shared-core CPU host the sharded run typically loses wall time to
+    cross-device orchestration, so ``sharded_decode_speedup`` is reported
+    honestly as a trajectory number for real multi-host runs.
+    """
+
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import EpisodeTokenizer
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+    from repro.runtime.scheduler import ContinuousBatchingScheduler
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+    ndev = len(jax.devices())
+    out = {"sharded_devices": ndev}
+    if ndev < 2:
+        _update_json(path, out)
+        rows = [
+            "sharded: single host device — skipped (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8)"
+        ]
+        return rows, 0.0, out
+
+    # bit-exact parity needs f32: bf16 differs at ulp level from the
+    # batch-split gemm shapes under GSPMD
+    cfg = get_smoke_config("openvla-7b").replace(
+        dtype="float32", param_dtype="float32"
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = EpisodeTokenizer(cfg.vocab_size)
+    mesh = make_host_mesh()
+    d = mesh.shape["data"]
+
+    n_burst = 16
+    rng = np.random.default_rng(2)
+    burst = [_obs(rng, 1) for _ in range(n_burst)]
+    # identical pool geometry for both engines: pool+1 divisible by the data
+    # axis so the sharded scheduler does not re-round it
+    pages_per_req = -(-(2 * N_JOINTS + TOKENS_PER_CHUNK) // 16)
+    pool = d * (-(-(pages_per_req * n_burst + 1) // d)) - 1
+    kw = dict(max_slots=8, scan_rounds=SCAN_ROUNDS, num_pages=pool)
+    single = ContinuousBatchingScheduler(model, params, tok, **kw)
+    sharded = ContinuousBatchingScheduler(model, params, tok, mesh=mesh, **kw)
+
+    def run(sched):
+        sched.reset()
+        for i, (qd, tau) in enumerate(burst):
+            sched.submit(i, qd, tau)
+        t0 = clock()
+        done = {}
+        while len(done) < n_burst:
+            for res in sched.step():
+                done[res.robot_id] = res.tokens
+        return clock() - t0, done
+
+    rows = []
+    run(single)  # warm the jit caches
+    dt_single, toks_single = min(run(single), run(single), key=lambda r: r[0])
+    run(sharded)
+    dt_sharded, toks_sharded = min(
+        run(sharded), run(sharded), key=lambda r: r[0]
+    )
+    parity = sum(
+        np.array_equal(toks_single[i], toks_sharded[i]) for i in range(n_burst)
+    ) / n_burst
+    out["single_tok_s"] = n_burst * TOKENS_PER_CHUNK / dt_single
+    out["sharded_tok_s"] = n_burst * TOKENS_PER_CHUNK / dt_sharded
+    out["sharded_decode_speedup"] = out["sharded_tok_s"] / out["single_tok_s"]
+    out["sharded_parity"] = parity
+    out["sharded_shard_high_water"] = list(sharded.allocator.shard_high_water)
+    rows.append(
+        f"16-request burst over {d}-way data mesh: "
+        f"single={out['single_tok_s']:.0f} tok/s "
+        f"sharded={out['sharded_tok_s']:.0f} tok/s "
+        f"({out['sharded_decode_speedup']:.2f}x), parity={parity:.2f}"
+    )
+    rows.append(
+        f"per-shard page high-water: {out['sharded_shard_high_water']}"
+    )
+    _update_json(path, out)
+    return rows, round(out["sharded_decode_speedup"], 2), out
+
+
 def main(argv=None):
     import argparse
     import sys
@@ -273,6 +376,12 @@ def main(argv=None):
         "--check-min-ragged-speedup", type=float, default=None, metavar="FLOOR",
         help="exit non-zero if ragged_vs_gang_speedup lands below FLOOR "
              "(the CI regression gate for the device-resident decode win)",
+    )
+    p.add_argument(
+        "--check-min-sharded-parity", type=float, default=None, metavar="FLOOR",
+        help="exit non-zero if sharded_parity (fraction of burst requests "
+             "whose sharded tokens are bit-identical to single-device, f32) "
+             "lands below FLOOR; requires forced multi-device",
     )
     args = p.parse_args(argv)
 
@@ -287,6 +396,28 @@ def main(argv=None):
     print(f"paged_engine_concurrency,{(clock() - t0) * 1e6:.0f},{derived}")
     for r in prows:
         print("   ", r)
+    t0 = clock()
+    srows, derived, sharded_out = bench_sharded_rows()
+    print(f"sharded_decode,{(clock() - t0) * 1e6:.0f},{derived}")
+    for r in srows:
+        print("   ", r)
+    if args.check_min_sharded_parity is not None:
+        floor = args.check_min_sharded_parity
+        got = sharded_out.get("sharded_parity")
+        if got is None:
+            print(
+                "FAIL: sharded parity gate needs more than one host device "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+        if got < floor:
+            print(
+                f"FAIL: sharded_parity={got:.3f} below the required floor "
+                f"{floor:.3f}", file=sys.stderr,
+            )
+            sys.exit(1)
+        print(f"sharded parity gate OK: {got:.3f} >= {floor:.3f}")
     if args.check_min_ragged_speedup is not None:
         got = out["ragged_vs_gang_speedup"]
         floor = args.check_min_ragged_speedup

@@ -95,6 +95,15 @@ def main(argv=None):
     p.add_argument("--scan-rounds", type=int, default=1,
                    help="decode rounds per jitted scan window; >1 keeps the "
                         "decode loop device-resident between host syncs")
+    p.add_argument("--sharded", action="store_true",
+                   help="shard the cloud engine (page pools, decode rows, "
+                        "params) over every host device; test multi-device "
+                        "on CPU with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N")
+    p.add_argument("--disaggregate-prefill", action="store_true",
+                   help="run prompt prefill on its own device, handing off "
+                        "to the decode pool via the paged cache at window "
+                        "boundaries")
     p.add_argument("--profile", default=None, metavar="DIR",
                    help="wrap the fleet serve loop in jax.profiler.trace "
                         "writing to DIR, and print per-window host-gap time")
@@ -168,6 +177,21 @@ def main(argv=None):
                 print(f"mixed fleet: robots {split} serve through the split")
         import contextlib
 
+        mesh = prefill_group = None
+        if args.disaggregate_prefill:
+            from repro.launch.mesh import split_device_groups
+
+            prefill_group, decode_group = split_device_groups(prefill=1)
+            print(f"disaggregated prefill: {prefill_group[0]}")
+        if args.sharded:
+            from repro.launch.mesh import make_host_mesh, make_test_mesh
+
+            if prefill_group is not None and len(decode_group) < len(jax.devices()):
+                # shard decode over its own group; prefill keeps its device
+                mesh = make_test_mesh(data=len(decode_group), devices=decode_group)
+            else:
+                mesh = make_host_mesh()
+            print(f"sharded engine: mesh {dict(mesh.shape)}")
         profiling = (
             jax.profiler.trace(args.profile)
             if args.profile else contextlib.nullcontext()
@@ -179,6 +203,7 @@ def main(argv=None):
                 partition_executor=executor, split_robots=split,
                 trigger=args.trigger, defer_hot_admission=args.defer_hot,
                 scan_rounds=args.scan_rounds, obs=mk_obs(), tick=args.tick,
+                mesh=mesh, prefill_group=prefill_group,
             )
         if args.assign_cuts:
             # close the loop heterogeneously: per-robot cuts from episode
@@ -199,6 +224,7 @@ def main(argv=None):
                     defer_hot_admission=args.defer_hot,
                     scan_rounds=args.scan_rounds, obs=mk_obs(),
                     tick=args.tick,
+                    mesh=mesh, prefill_group=prefill_group,
                 )
                 print(f"episode 2 robot cuts: {out['robot_cuts']} "
                       f"({len(out['active_cuts'])} distinct; "

@@ -157,3 +157,47 @@ def paged_decode_attention(
         v_pages,
     )
     return out
+
+
+def paged_decode_attention_sharded(
+    q: jax.Array,           # [B, H, D]; B divisible by the mesh "data" size
+    k_pages: jax.Array,     # [P, page, KV, D] (replicated per shard)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # [B, MAXP] int32 (global page ids)
+    cache_lens: jax.Array,  # [B] int32
+    *,
+    mesh,
+    window: int = 0,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """shard_map-compatible dispatch: rows shard over the mesh ``data`` axis.
+
+    Each shard runs the ordinary dispatch (Pallas kernel on TPU, the
+    reference path elsewhere) over its row slice against a full view of the
+    page pools — page ids stay global, so no table translation is needed.
+    Decode attention is per-row math with no cross-row reduction, making the
+    sharded launch bit-identical to the single-device one.
+    """
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops as kops
+
+    def local(q_, kp_, vp_, pt_, lens_):
+        return kops.paged_decode_attention(
+            q_, kp_, vp_, pt_, lens_, window=window, logit_cap=logit_cap
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P("data"), P(), P(), P("data"), P("data")),
+        out_specs=P("data"),
+        check_rep=False,
+    )
+    return fn(
+        q, k_pages, v_pages,
+        jnp.asarray(page_table, jnp.int32),
+        jnp.asarray(cache_lens, jnp.int32),
+    )

@@ -224,6 +224,8 @@ def serve_fleet(
     defer_hot_admission: Optional[float] = None,
     num_pages: Optional[int] = None,
     scan_rounds: int = 1,
+    mesh=None,
+    prefill_group=None,
     trigger: str = "always",
     trigger_cfg: Optional[TriggerConfig] = None,
     record_streams: bool = False,
@@ -341,10 +343,15 @@ def serve_fleet(
     step_fn = jax.jit(lambda s, f: rpolicy.trigger_step(s, f, pcfg))
     telemetry = FleetTelemetry(n_robots, record_streams=record_streams, obs=obs)
 
+    # ``mesh`` shards the engine's page pools / decode rows / params over
+    # the mesh's data axis (tokens bit-identical for f32 models);
+    # ``prefill_group`` disaggregates prompt prefill onto its own device
+    # group, handing off through the paged cache at window boundaries
     sched = ContinuousBatchingScheduler(
         model, params, tokenizer,
         max_slots=max_slots, chunk_len=chunk_len, n_joints=n_joints,
         num_pages=num_pages, scan_rounds=scan_rounds, obs=obs,
+        mesh=mesh, prefill_group=prefill_group,
     )
     if robot_cuts is None:
         robot_cuts = (
@@ -383,6 +390,13 @@ def serve_fleet(
     # so only the core timer adds clock reads (two per tick, both paths).
     core_s = 0.0
     engine_s = 0.0
+    # host-gap accounting per scan window: step() host time accumulates
+    # until the window CLOSES (the sync), so with scan_rounds > 1 the
+    # boundary sample includes the closing call — previously only the
+    # dispatch call was recorded and a prefill stall inside the window's
+    # sync was invisible to ``host_gap_ms``
+    window_host_ms = 0.0
+    prev_closes = 0
     t_start = clock()
 
     if tick == "legacy":
@@ -433,13 +447,15 @@ def serve_fleet(
                 )
                 in_flight.add(r)
                 n_off[r] += 1
-            prev_windows = sched.windows
             t0 = clock()
             results = sched.step()
             step_s = clock() - t0
             engine_s += step_s
-            if sched.windows > prev_windows:
-                telemetry.note_boundary(step_s * 1e3)
+            window_host_ms += step_s * 1e3
+            if sched.window_closes > prev_closes:
+                telemetry.note_boundary(window_host_ms)
+                window_host_ms = 0.0
+                prev_closes = sched.window_closes
             for res in results:
                 cached[res.robot_id] = tokenizer.decode_action(
                     res.tokens
@@ -527,13 +543,15 @@ def serve_fleet(
                 )
                 in_flight_mask[ids] = True
                 n_off[ids] += 1
-            prev_windows = sched.windows
             t0 = clock()
             results = sched.step()
             step_s = clock() - t0
             engine_s += step_s
-            if sched.windows > prev_windows:
-                telemetry.note_boundary(step_s * 1e3)
+            window_host_ms += step_s * 1e3
+            if sched.window_closes > prev_closes:
+                telemetry.note_boundary(window_host_ms)
+                window_host_ms = 0.0
+                prev_closes = sched.window_closes
             if results:
                 # at most one outstanding request per robot, so a harvest
                 # never carries duplicate robot ids — batched scatter is safe
@@ -845,6 +863,15 @@ def main(argv=None):
     p.add_argument("--scan-rounds", type=int, default=1,
                    help="decode rounds per jitted scan window (device-"
                         "resident decode; 1 = per-round stepping)")
+    p.add_argument("--sharded", action="store_true",
+                   help="shard the cloud engine (page pools, decode rows, "
+                        "params) over every host device's data axis; test "
+                        "multi-device on CPU with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N")
+    p.add_argument("--disaggregate-prefill", action="store_true",
+                   help="run prompt prefill on its own device group, "
+                        "handing off via the paged cache at window "
+                        "boundaries (prefill/decode disaggregation)")
     p.add_argument("--defer-hot", type=float, default=None,
                    help="cancellation-aware admission: preempt-rate "
                         "threshold above which a preempting robot's "
@@ -878,11 +905,27 @@ def main(argv=None):
             )
             if executor is not None:
                 split = list(range(1, args.fleet, 2))
+        mesh = prefill_group = None
+        if args.disaggregate_prefill:
+            from repro.launch.mesh import split_device_groups
+
+            prefill_group, decode_group = split_device_groups(prefill=1)
+            print(f"disaggregated prefill: {prefill_group[0]}")
+        if args.sharded:
+            from repro.launch.mesh import make_host_mesh, make_test_mesh
+
+            if prefill_group is not None and len(decode_group) < len(jax.devices()):
+                # shard decode over its own group; prefill keeps its device
+                mesh = make_test_mesh(data=len(decode_group), devices=decode_group)
+            else:
+                mesh = make_host_mesh()
+            print(f"sharded engine: mesh {dict(mesh.shape)}")
         out = serve_fleet(
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
             trigger=args.trigger, defer_hot_admission=args.defer_hot,
             scan_rounds=args.scan_rounds, obs=mk_obs(),
+            mesh=mesh, prefill_group=prefill_group,
         )
         if args.assign_cuts:
             # close the loop: re-assign per-robot cuts from episode 1's

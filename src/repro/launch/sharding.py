@@ -40,6 +40,11 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "expert": ("data",),
     "vocab": ("model",),
     "kv_seq": (),         # kv-cache sequence dim (sharded for long-context)
+    # global page-pool dim of the paged KV cache: page ids are global, each
+    # data shard owns a contiguous [P+1]/ndata block (trash page lives on
+    # the last shard) and the host allocator steers new sequences to the
+    # least-loaded shard's id range
+    "pages": ("data",),
     "state": ("model",),  # ssm/xlstm inner feature dim
     "conv": (),
 }
@@ -73,6 +78,23 @@ def sharding_rules(mesh: Mesh, overrides: Optional[Dict[str, Tuple[str, ...]]] =
     _CTX.mesh, _CTX.rules = mesh, make_rules(mesh, overrides)
     try:
         yield _CTX.rules
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+@contextlib.contextmanager
+def no_sharding():
+    """Suspend any active mesh context (``shard()`` becomes the identity).
+
+    Disaggregated serving uses this to trace the prefill-device entry point
+    single-device while the surrounding scheduler step runs under the
+    decode mesh.
+    """
+
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = None, None
+    try:
+        yield
     finally:
         _CTX.mesh, _CTX.rules = prev
 
@@ -130,9 +152,17 @@ def named_sharding(
 def pspec_tree(shapes_tree, logical_tree, mesh: Mesh, rules=None):
     """Map ``logical_to_pspec`` over parallel pytrees of shapes and logical axes."""
 
+    # a leaf is a flat tuple of dims (shapes tree) or axis names (logical
+    # tree) — tree.map applies is_leaf to the first tree, so both spellings
+    # must match or shape tuples get recursed into element-wise
+    def _leaf(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (int, str, type(None))) for e in x
+        )
+
     return jax.tree.map(
         lambda sh, ax: logical_to_pspec(sh, ax, mesh, rules),
         shapes_tree,
         logical_tree,
-        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        is_leaf=_leaf,
     )

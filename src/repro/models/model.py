@@ -697,17 +697,24 @@ class Model:
                 # output over its own input, which a shared zeros array
                 # (donated twice) would break
                 shape = (r, spec.num_pages + 1, spec.page_size, nkv, hd)
+                # under a mesh context the pool shards over its global page
+                # dim ("pages" -> the data axis): each shard owns a
+                # contiguous block of page ids, matching the host
+                # allocator's shard-aware free lists
                 unit.append({
-                    "kp": jnp.zeros(shape, self.dtype),
-                    "vp": jnp.zeros(shape, self.dtype),
+                    "kp": shard(jnp.zeros(shape, self.dtype),
+                                None, "pages", None, None, None),
+                    "vp": shard(jnp.zeros(shape, self.dtype),
+                                None, "pages", None, None, None),
                 })
             else:
                 unit.append(self._init_block_cache(s, batch, spec.tokens_per_seq))
         return {
             "unit": unit,
-            "len": jnp.zeros((batch,), jnp.int32),
-            "pt": jnp.zeros((batch, spec.max_pages_per_seq), jnp.int32),
-            "cap": jnp.zeros((batch,), jnp.int32),
+            "len": shard(jnp.zeros((batch,), jnp.int32), "batch"),
+            "pt": shard(jnp.zeros((batch, spec.max_pages_per_seq), jnp.int32),
+                        "batch", None),
+            "cap": shard(jnp.zeros((batch,), jnp.int32), "batch"),
         }
 
     def cache_to_paged(self, cache, paged, page_table, caps, lens=None):

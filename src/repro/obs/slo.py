@@ -40,8 +40,9 @@ def _count(metrics: MetricsRegistry, name: str) -> int:
     return int(c.value) if isinstance(c, Counter) else 0
 
 
-def _gauge(metrics: MetricsRegistry, name: str, high: bool = False) -> float:
-    g = metrics.get(name)
+def _gauge(metrics: MetricsRegistry, name: str, high: bool = False,
+           **labels) -> float:
+    g = metrics.get(name, **labels)
     if not isinstance(g, Gauge):
         return 0.0
     return float(g.high if high else g.value)
@@ -67,6 +68,10 @@ class SLOReport:
     pool_high_water: int = 0
     pool_page_allocs: int = 0
     pool_page_frees: int = 0
+    # sharded decode only: per-data-shard page occupancy (empty lists when
+    # the engine ran single-shard)
+    pool_shard_in_use: List[int] = field(default_factory=list)
+    pool_shard_high_water: List[int] = field(default_factory=list)
 
     def to_json(self) -> Dict[str, object]:
         rd = lambda d: {k: round(float(v), 4) for k, v in d.items()}
@@ -87,6 +92,8 @@ class SLOReport:
             "pool_high_water": self.pool_high_water,
             "pool_page_allocs": self.pool_page_allocs,
             "pool_page_frees": self.pool_page_frees,
+            "pool_shard_in_use": list(self.pool_shard_in_use),
+            "pool_shard_high_water": list(self.pool_shard_high_water),
         }
 
     def lines(self) -> List[str]:
@@ -107,7 +114,11 @@ class SLOReport:
             f"replay_fraction={self.replay_fraction:.3f})",
             f"SLO kv pool: high_water={self.pool_high_water} pages "
             f"(allocs={self.pool_page_allocs} frees={self.pool_page_frees})",
-        ]
+        ] + (
+            [f"SLO kv shards: in_use={self.pool_shard_in_use} "
+             f"high_water={self.pool_shard_high_water}"]
+            if self.pool_shard_in_use else []
+        )
 
 
 def build_slo_report(metrics: MetricsRegistry) -> SLOReport:
@@ -136,4 +147,13 @@ def build_slo_report(metrics: MetricsRegistry) -> SLOReport:
         pool_high_water=int(_gauge(metrics, "pool.high_water", high=True)),
         pool_page_allocs=int(_gauge(metrics, "pool.page_allocs_total")),
         pool_page_frees=int(_gauge(metrics, "pool.page_frees_total")),
+        pool_shard_in_use=[
+            int(_gauge(metrics, "pool.shard_pages_in_use", shard=str(s)))
+            for s in range(int(_gauge(metrics, "pool.num_shards")))
+        ],
+        pool_shard_high_water=[
+            int(_gauge(metrics, "pool.shard_high_water", shard=str(s),
+                       high=True))
+            for s in range(int(_gauge(metrics, "pool.num_shards")))
+        ],
     )

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import EpisodeTokenizer
+from repro.launch.sharding import shard
 from repro.models.layers import embed_lookup, rms_norm
 from repro.models.model import Model
 from repro.obs.clock import clock
@@ -258,9 +259,13 @@ class PartitionExecutor:
         cfg = self.cfg
         hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
         shape = (spec.num_pages + 1, spec.page_size, nkv, hd)
+        # sharded serving: suffix pools shard over the global page dim too,
+        # so split-lane suffix KV lands on the shard that owns its pages
         return {
-            "kp": jnp.zeros(shape, self.model.dtype),
-            "vp": jnp.zeros(shape, self.model.dtype),
+            "kp": shard(jnp.zeros(shape, self.model.dtype),
+                        "pages", None, None, None),
+            "vp": shard(jnp.zeros(shape, self.model.dtype),
+                        "pages", None, None, None),
         }
 
     def init_lane_state(self, spec, rows: int):

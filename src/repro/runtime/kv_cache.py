@@ -78,29 +78,122 @@ class PageAllocator:
     episode's KV pressure, not a lifetime max.  ``total_allocs`` /
     ``total_frees`` are lifetime page counts (never reset) feeding the
     observability registry's alloc/free rates.
+
+    **Shard-aware mode** (``num_shards > 1``): page ids stay global, but the
+    free list splits into per-shard LIFO lists where shard ownership is
+    ``page_id // pages_per_shard`` — the same contiguous-block layout GSPMD
+    gives a pool array sharded over its page dim, so "allocate on shard s"
+    is exactly "this page's KV bytes live on device s".  ``alloc`` steers
+    whole requests to the least-loaded shard (a sequence's pages stay
+    device-local) and spills across shards only when no single shard can
+    hold the request.  Per-shard in_use/high-water stats are plain host
+    counters — aggregating them costs no device syncs.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(
+        self,
+        num_pages: int,
+        num_shards: int = 1,
+        pages_per_shard: Optional[int] = None,
+    ):
         if num_pages <= 0:
             raise ValueError("num_pages must be positive")
+        if num_shards <= 0:
+            raise ValueError("num_shards must be positive")
         self.num_pages = num_pages
-        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.num_shards = num_shards
+        # default: distribute the id space evenly (ceil so every id maps)
+        self.pages_per_shard = (
+            pages_per_shard
+            if pages_per_shard is not None
+            else -(-num_pages // num_shards)
+        )
+        if self.pages_per_shard * num_shards < num_pages:
+            raise ValueError(
+                f"{num_shards} shards x {self.pages_per_shard} pages/shard "
+                f"< {num_pages} pool pages"
+            )
+        self._free_by_shard: List[List[int]] = [[] for _ in range(num_shards)]
+        for p in range(num_pages - 1, -1, -1):
+            self._free_by_shard[self.shard_of(p)].append(p)
+        self._shard_in_use = [0] * num_shards
+        self._shard_high = [0] * num_shards
         self.high_water = 0
         self.total_allocs = 0
         self.total_frees = 0
 
+    def shard_of(self, page: int) -> int:
+        return min(page // self.pages_per_shard, self.num_shards - 1)
+
+    @property
+    def _free(self) -> List[int]:
+        """Read-only flat view of the free list (tests/debugging)."""
+
+        return [p for f in self._free_by_shard for p in f]
+
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free_by_shard)
 
     @property
     def num_in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - self.num_free
 
-    def alloc(self, n: int = 1) -> List[int]:
-        if n > len(self._free):
-            raise OutOfPages(f"requested {n} pages, {len(self._free)} free")
-        out = [self._free.pop() for _ in range(n)]
+    @property
+    def shard_in_use(self) -> List[int]:
+        return list(self._shard_in_use)
+
+    @property
+    def shard_free(self) -> List[int]:
+        return [len(f) for f in self._free_by_shard]
+
+    @property
+    def shard_high_water(self) -> List[int]:
+        return list(self._shard_high)
+
+    def _take(self, shard: int, n: int) -> List[int]:
+        free = self._free_by_shard[shard]
+        out = [free.pop() for _ in range(n)]
+        self._shard_in_use[shard] += n
+        self._shard_high[shard] = max(
+            self._shard_high[shard], self._shard_in_use[shard]
+        )
+        return out
+
+    def alloc(self, n: int = 1, shard: Optional[int] = None) -> List[int]:
+        """Allocate ``n`` pages; steer to one shard when possible.
+
+        ``shard=None`` picks the least-loaded shard that can hold the whole
+        request (ties break to the lowest shard id for determinism); if none
+        can, the request spills across shards least-loaded-first.  An
+        explicit ``shard`` pins the request there (spilling if short).
+        """
+
+        if n > self.num_free:
+            raise OutOfPages(f"requested {n} pages, {self.num_free} free")
+        if self.num_shards == 1:
+            out = self._take(0, n)
+        else:
+            order = sorted(
+                range(self.num_shards),
+                key=lambda s: (self._shard_in_use[s], s),
+            )
+            if shard is not None:
+                order = [shard] + [s for s in order if s != shard]
+            home = next(
+                (s for s in order if len(self._free_by_shard[s]) >= n), None
+            )
+            if home is not None:
+                out = self._take(home, n)
+            else:
+                out, need = [], n
+                for s in order:
+                    take = min(need, len(self._free_by_shard[s]))
+                    if take:
+                        out.extend(self._take(s, take))
+                        need -= take
+                    if not need:
+                        break
         self.total_allocs += n
         self.high_water = max(self.high_water, self.num_in_use)
         return out
@@ -109,9 +202,11 @@ class PageAllocator:
         for p in pages:
             if not 0 <= p < self.num_pages:
                 raise ValueError(f"page id {p} out of range")
-            if p in self._free:
+            s = self.shard_of(p)
+            if p in self._free_by_shard[s]:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            self._free_by_shard[s].append(p)
+            self._shard_in_use[s] -= 1
         self.total_frees += len(pages)
 
     def reset_high_water(self) -> None:
@@ -119,6 +214,7 @@ class PageAllocator:
         between serving episodes so the mark is per-episode)."""
 
         self.high_water = self.num_in_use
+        self._shard_high = list(self._shard_in_use)
 
     def reclaim_all(self) -> None:
         """Return every page to the free list and restart the high-water
@@ -128,7 +224,10 @@ class PageAllocator:
         survive (the reclaimed pages count as freed)."""
 
         self.total_frees += self.num_in_use
-        self._free = list(range(self.num_pages - 1, -1, -1))
+        self._free_by_shard = [[] for _ in range(self.num_shards)]
+        for p in range(self.num_pages - 1, -1, -1):
+            self._free_by_shard[self.shard_of(p)].append(p)
+        self._shard_in_use = [0] * self.num_shards
         self.reset_high_water()
 
 

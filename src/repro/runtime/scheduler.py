@@ -60,6 +60,7 @@ clock read, so request spans align exactly with their window's close.
 
 from __future__ import annotations
 
+import contextlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
@@ -67,8 +68,16 @@ from typing import Deque, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import EpisodeTokenizer
+from repro.launch.sharding import (
+    named_sharding,
+    no_sharding,
+    shard as logical_shard,
+    sharding_rules,
+)
+from repro.models.layers import is_axes
 from repro.models.model import Model
 from repro.obs.clock import clock
 from repro.runtime.kv_cache import PageAllocator, PagedSpec, donating_jit
@@ -97,11 +106,18 @@ class ChunkRequest:
 
 @dataclass(frozen=True)
 class PoolStats:
-    """KV page-pool utilization snapshot."""
+    """KV page-pool utilization snapshot.
+
+    In mesh-sharded mode the per-shard tuples report each data shard's
+    occupancy/high-water alongside the global aggregate (all plain host
+    counters — no device syncs); ``None`` on a single-shard pool.
+    """
 
     pages_in_use: int
     pages_free: int
     high_water: int
+    shard_in_use: Optional[Tuple[int, ...]] = None
+    shard_high_water: Optional[Tuple[int, ...]] = None
 
 
 @dataclass
@@ -136,6 +152,10 @@ class _Sequence:
     # cancelled while a scan window was in flight: the donated decode still
     # writes this row's pages, so they are freed at the boundary, not here
     dead: bool = False
+    # disaggregated admission: prefill dispatched on the prefill device but
+    # not yet merged into the live pool — the row decodes into the trash
+    # page (cap 0) and is excluded from harvest until the merge boundary
+    pending: bool = False
     admit_ts: float = 0.0    # obs.clock at batched-prefill admission
 
 
@@ -170,12 +190,43 @@ class ContinuousBatchingScheduler:
         num_pages: Optional[int] = None,
         scan_rounds: int = 1,
         obs=None,
+        mesh=None,
+        prefill_group=None,
     ):
         if model.cfg.encoder_decoder:
             raise NotImplementedError("continuous batching targets decoder-only VLAs")
         self.model = model
-        self.params = params
         self.tok = tokenizer
+        # mesh-sharded mode: the page pools shard over the mesh ``data``
+        # axis (global page ids, contiguous per-shard blocks), decode rows
+        # and params lay out via the logical sharding rules, and every
+        # jitted entry point (admission, scan windows, fused split decode)
+        # traces under the mesh context so model-internal ``shard()`` calls
+        # take effect — token outputs stay bit-identical to single-device
+        # (all pool writes are unique-slot ``.at[].set``; no cross-row or
+        # cross-page reductions change order under GSPMD)
+        self.mesh = mesh
+        self._ndata = int(mesh.shape["data"]) if mesh is not None else 1
+        # prefill/decode disaggregation: long-prompt prefill runs on its
+        # own device (group) and hands off via the paged cache one window
+        # later, so prompt bursts stop serializing with in-flight decode
+        self._prefill_device = None
+        if prefill_group:
+            self._prefill_device = prefill_group[0]
+            self._prefill_params = jax.device_put(params, self._prefill_device)
+            self._prefill_fns = {}
+            self._merge_fns = {}
+            self._pending_admit: List[tuple] = []
+        if mesh is not None:
+            logical = model.param_logical()
+            self.params = jax.tree.map(
+                lambda ax, p: jax.device_put(
+                    p, named_sharding(mesh, p.shape, ax.names)
+                ),
+                logical, params, is_leaf=is_axes,
+            )
+        else:
+            self.params = params
         # optional Observability handle; every producer site is guarded on
         # ``self.obs is not None`` so a None handle costs nothing.  Swappable
         # between runs (the serving bench attaches a fresh one per run).
@@ -202,13 +253,23 @@ class ContinuousBatchingScheduler:
         self.cancelled = 0           # sequences cancelled mid-flight
         self.deferred = 0            # submissions admitted late on purpose
         self.windows = 0             # dispatched scan windows
+        self.window_closes = 0       # harvested (synced) scan windows
         self.last_round_kinds: Tuple[int, int] = (0, 0)  # (cloud, split)
 
         # KV page accounting: a request needs prompt + chunk tokens resident
         self.page_size = page_size
         self.pages_per_req = -(-(self.prompt_len + self.total_tokens) // page_size)
         pool = num_pages if num_pages is not None else self.pages_per_req * max_slots
-        self.allocator = PageAllocator(pool)
+        if self._ndata > 1:
+            # pool+1 (incl. the trash page) must split evenly over the data
+            # axis so the allocator's shard ownership (contiguous id blocks)
+            # coincides exactly with the GSPMD layout of the pool arrays
+            pool = self._ndata * (-(-(pool + 1) // self._ndata)) - 1
+        self.allocator = PageAllocator(
+            pool,
+            num_shards=self._ndata,
+            pages_per_shard=(pool + 1) // self._ndata if self._ndata > 1 else None,
+        )
         self.paged_spec = PagedSpec(
             num_pages=pool,
             page_size=page_size,
@@ -216,9 +277,14 @@ class ContinuousBatchingScheduler:
         )
         self.cap_tokens = self.pages_per_req * page_size
 
+        # decode rows shard over the data axis, so keep the row count a
+        # multiple of it (doubling in _grow_rows preserves the property)
+        rows0 = max_slots
+        if self._ndata > 1:
+            rows0 = self._ndata * (-(-rows0 // self._ndata))
         self._queue: Deque[ChunkRequest] = deque()
         self._seqs: Dict[int, _Sequence] = {}    # row -> sequence
-        self._free_rows: List[int] = list(range(max_slots))
+        self._free_rows: List[int] = list(range(rows0))
         # cut-keyed split-lane registry: one lane per DISTINCT active cut,
         # all drawing pages from the one allocator above
         self._lanes: Dict[int, "_SplitLane"] = {}
@@ -235,14 +301,25 @@ class ContinuousBatchingScheduler:
 
         # live batch state: logits rows + the paged cache (shared pools,
         # per-row page table / length / capacity — zeros mean inactive)
-        self.rows = max_slots
+        self.rows = rows0
         logits_shape = jax.eval_shape(
             lambda p, b: self.model.prefill(p, b, extra=0)[0],
             params, {"tokens": jnp.zeros((1, self.prompt_len), jnp.int32)},
         )
         self._vdim = logits_shape.shape[-1]
-        self._logits = jnp.zeros((self.rows, self._vdim), logits_shape.dtype)
-        self._pcache = model.init_paged_cache(self.rows, self.paged_spec)
+        with self._ctx():
+            self._logits = logical_shard(
+                jnp.zeros((self.rows, self._vdim), logits_shape.dtype),
+                "batch", None,
+            )
+            self._pcache = model.init_paged_cache(self.rows, self.paged_spec)
+
+    def _ctx(self):
+        """Mesh trace/placement context (identity without a mesh)."""
+
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sharding_rules(self.mesh)
 
     # ------------------------------------------------------------------
     # request interface
@@ -472,10 +549,14 @@ class ContinuousBatchingScheduler:
         return sorted(c for c, l in self._lanes.items() if l.seqs)
 
     def pool_stats(self) -> PoolStats:
+        a = self.allocator
+        sharded = a.num_shards > 1
         return PoolStats(
-            pages_in_use=self.allocator.num_in_use,
-            pages_free=self.allocator.num_free,
-            high_water=self.allocator.high_water,
+            pages_in_use=a.num_in_use,
+            pages_free=a.num_free,
+            high_water=a.high_water,
+            shard_in_use=tuple(a.shard_in_use) if sharded else None,
+            shard_high_water=tuple(a.shard_high_water) if sharded else None,
         )
 
     def reset(self) -> None:
@@ -489,9 +570,19 @@ class ContinuousBatchingScheduler:
         # ``PoolStats.high_water`` stays meaningful on a reused scheduler
         self.allocator.reclaim_all()
         self._window = None
-        self._logits = jnp.zeros_like(self._logits)
-        self._pcache["len"] = jnp.zeros((self.rows,), jnp.int32)
-        self._pcache["cap"] = jnp.zeros((self.rows,), jnp.int32)
+        if self._prefill_device is not None:
+            self._pending_admit = []
+        with self._ctx():
+            # fresh zeros lose the mesh layout; re-apply the logical shards
+            self._logits = logical_shard(
+                jnp.zeros_like(self._logits), "batch", None
+            )
+            self._pcache["len"] = logical_shard(
+                jnp.zeros((self.rows,), jnp.int32), "batch"
+            )
+            self._pcache["cap"] = logical_shard(
+                jnp.zeros((self.rows,), jnp.int32), "batch"
+            )
         for lane in self._lanes.values():
             lane.reset()
         self._suffix_pools = None
@@ -503,6 +594,7 @@ class ContinuousBatchingScheduler:
         self.cancelled = 0
         self.deferred = 0
         self.windows = 0
+        self.window_closes = 0
         self.last_round_kinds = (0, 0)
 
     # ------------------------------------------------------------------
@@ -526,7 +618,13 @@ class ContinuousBatchingScheduler:
         return blk
 
     def _grow_rows(self) -> None:
-        """Double the row arrays (page pools are shared and don't grow)."""
+        """Double the row arrays (page pools are shared and don't grow).
+
+        With a mesh, the doubled row count stays a multiple of the data
+        axis; the concatenated row-indexed arrays are re-laid-out under
+        the logical rules (concat with unsharded pad zeros would otherwise
+        leave XLA's choice of layout).  Values are unaffected either way.
+        """
 
         old, new = self.rows, self.rows * 2
         pad = new - old
@@ -557,6 +655,14 @@ class ContinuousBatchingScheduler:
                 [self._pcache["cap"], jnp.zeros((pad,), jnp.int32)]
             ),
         }
+        if self.mesh is not None:
+            with self._ctx():
+                self._logits = logical_shard(self._logits, "batch", None)
+                self._pcache["len"] = logical_shard(self._pcache["len"], "batch")
+                self._pcache["pt"] = logical_shard(
+                    self._pcache["pt"], "batch", None
+                )
+                self._pcache["cap"] = logical_shard(self._pcache["cap"], "batch")
         self._free_rows.extend(range(old, new))
         self.rows = new
 
@@ -706,6 +812,11 @@ class ContinuousBatchingScheduler:
         ``earliest_round`` lies in the future holds its lane back this round
         (deferred admissions keep their FIFO slot)."""
 
+        if self._prefill_device is not None and self._pending_admit:
+            # disaggregation phase 2: last boundary's prefill-device results
+            # merge into the live pool before any new reservations, so a
+            # cancelled pending sequence's recycled pages are never touched
+            self._merge_pending()
         new: List[_Sequence] = []
         new_split: Dict[int, list] = {}
         while self.allocator.num_free >= self.pages_per_req:
@@ -740,6 +851,9 @@ class ContinuousBatchingScheduler:
             self._lanes[cut].flush(seqs)
         if not new:
             return
+        if self._prefill_device is not None:
+            self._dispatch_prefill(new)
+            return
         n = _bucket(len(new))
         obs = np.zeros((n, self.prompt_len), np.int64)
         pt_new = np.zeros((n, self.pages_per_req), np.int32)
@@ -766,6 +880,107 @@ class ContinuousBatchingScheduler:
         del self._seqs[seq.row]
         self._free_rows.append(seq.row)
         self._pcache["cap"] = self._pcache["cap"].at[seq.row].set(0)
+
+    # ------------------------------------------------------------------
+    # prefill/decode disaggregation (``prefill_group``)
+    # ------------------------------------------------------------------
+
+    def _prefill_for(self, n: int):
+        """Jitted prompt prefill pinned to the prefill device.
+
+        Traced OUTSIDE any mesh context: the prefill group is its own
+        single-device domain; computation follows the device-put params and
+        tokens there, overlapping the decode devices' in-flight window.
+        """
+
+        fn = self._prefill_fns.get(n)
+        if fn is None:
+            def pf(params, obs):
+                return self.model.prefill(params, {"tokens": obs}, extra=0)
+
+            fn = jax.jit(pf)
+            self._prefill_fns[n] = fn
+        return fn
+
+    def _merge_for(self, n: int):
+        """Donated merge of a transferred prefill into the live pool."""
+
+        key = (n, self.rows)
+        fn = self._merge_fns.get(key)
+        if fn is None:
+            def merge(pcache, logits_live, dcache, new_logits,
+                      pt_new, row_idx, lens, caps):
+                pcache = self.model.merge_prefill_into_paged(
+                    dcache, pcache, pt_new, row_idx, lens, caps
+                )
+                logits_live = logits_live.at[row_idx].set(
+                    new_logits[:, -1], mode="drop"
+                )
+                return pcache, logits_live
+
+            fn = donating_jit(merge, donate_argnums=(0, 1))
+            self._merge_fns[key] = fn
+        return fn
+
+    def _dispatch_prefill(self, new: List[_Sequence]) -> None:
+        """Disaggregated admission, phase 1 (this boundary): the batched
+        prompt prefill runs asynchronously on the prefill device while the
+        window just dispatched decodes on the decode devices.  The
+        sequences keep their reserved rows/pages but stay ``pending`` —
+        cap 0 routes any scan writes on their rows to the trash page and
+        they are excluded from harvest — until the NEXT boundary merges
+        the prefill KV.  One extra window of admission latency buys prompt
+        prefill that no longer serializes with in-flight decode."""
+
+        n = _bucket(len(new))
+        obs = np.zeros((n, self.prompt_len), np.int64)
+        for i, seq in enumerate(new):
+            obs[i] = seq.request.obs
+            seq.pending = True
+        with no_sharding():
+            new_logits, dcache = self._prefill_for(n)(
+                self._prefill_params,
+                jax.device_put(jnp.asarray(obs), self._prefill_device),
+            )
+        self._pending_admit.append((new, new_logits, dcache))
+
+    def _merge_pending(self) -> None:
+        """Disaggregated admission, phase 2 (next boundary): move the
+        prefill device's dense caches to the decode side and install them
+        into the live (possibly sharded) pool with the donated merge.
+        Sequences cancelled while pending were released at cancel time:
+        their merge rows are dropped (out-of-range row index) and their
+        prompt KV routes to the trash page (len 0), so pages a later
+        admission may have reused are never written."""
+
+        pending, self._pending_admit = self._pending_admit, []
+        for new, new_logits, dcache in pending:
+            n = new_logits.shape[0]
+            pt_new = np.zeros((n, self.pages_per_req), np.int32)
+            row_idx = np.full((n,), self.rows, np.int32)
+            lens = np.zeros((n,), np.int32)
+            caps = np.zeros((n,), np.int32)
+            for i, seq in enumerate(new):
+                if seq.dead or self._seqs.get(seq.row) is not seq:
+                    continue
+                pt_new[i] = seq.pages
+                row_idx[i] = seq.row
+                lens[i] = self.prompt_len
+                caps[i] = self.cap_tokens
+                seq.pending = False
+            # jit refuses mixed committed devices: explicitly move the
+            # prefill-device results into the decode domain (replicated
+            # over the mesh, or onto the default decode device)
+            tgt = (
+                NamedSharding(self.mesh, P())
+                if self.mesh is not None else jax.devices()[0]
+            )
+            new_logits, dcache = jax.device_put((new_logits, dcache), tgt)
+            self._pcache, self._logits = self._merge_for(n)(
+                self._pcache, self._logits, dcache, new_logits,
+                jnp.asarray(pt_new), jnp.asarray(row_idx),
+                jnp.asarray(lens), jnp.asarray(caps),
+            )
 
     # ------------------------------------------------------------------
     # observability producers (all guarded: no-ops when ``obs`` is None)
@@ -844,6 +1059,14 @@ class ContinuousBatchingScheduler:
         m.gauge("pool.high_water").set(alloc.high_water)
         m.gauge("pool.page_allocs_total").set(alloc.total_allocs)
         m.gauge("pool.page_frees_total").set(alloc.total_frees)
+        if alloc.num_shards > 1:
+            # per-data-shard pool gauges (host counters — no device syncs)
+            m.gauge("pool.num_shards").set(alloc.num_shards)
+            for s, (iu, hw) in enumerate(
+                zip(alloc.shard_in_use, alloc.shard_high_water)
+            ):
+                m.gauge("pool.shard_pages_in_use", shard=str(s)).set(iu)
+                m.gauge("pool.shard_high_water", shard=str(s)).set(hw)
 
     def step(self) -> List[ChunkResult]:
         """Advance one decode round.
@@ -855,6 +1078,14 @@ class ContinuousBatchingScheduler:
         R-th call syncs once and emits everything the window finished.
         """
 
+        # every jitted entry point (admission, merge, scan window, fused
+        # split) traces inside the mesh context so model-internal shard()
+        # calls and the "pages"/"batch" layouts apply; without a mesh this
+        # is a nullcontext and nothing changes
+        with self._ctx():
+            return self._step_impl()
+
+    def _step_impl(self) -> List[ChunkResult]:
         if self._window is not None:
             self.round += 1
             self._window.steps_left -= 1
@@ -899,7 +1130,9 @@ class ContinuousBatchingScheduler:
             w.toks, self._logits, self._pcache = self._decode_for(block, rounds)(
                 self.params, self._logits, self._pcache
             )
-            w.seqs = list(self._seqs.values())
+            # pending (disaggregated-prefill) rows decode into the trash
+            # page this window; they are merged — and harvested — later
+            w.seqs = [s for s in self._seqs.values() if not s.pending]
         planes = [l for l in self._lanes.values() if l.seqs and l.pipelined]
         if planes:
             self._split_fused_step(planes, rounds * block)
@@ -924,6 +1157,7 @@ class ContinuousBatchingScheduler:
         """
 
         w, self._window = self._window, None
+        self.window_closes += 1
         done: List[ChunkResult] = []
         if w.toks is not None:
             toks = np.asarray(w.toks)

@@ -1,0 +1,220 @@
+"""Unit tests for the logical sharding rules, mesh factories, and the
+shard-aware page allocator.  Everything here is single-device safe — pspec
+computation runs against a stub mesh, so the divisibility/steering logic is
+exercised without forcing host devices (``tests/test_sharded.py`` holds the
+multi-device parity suite)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh, make_test_mesh, split_device_groups
+from repro.launch.sharding import (
+    DEFAULT_RULES,
+    logical_to_pspec,
+    make_rules,
+    no_sharding,
+    pspec_tree,
+    shard,
+    sharding_rules,
+)
+from repro.runtime.kv_cache import OutOfPages, PageAllocator
+
+
+class _FakeMesh:
+    """Stub with the two attributes ``logical_to_pspec`` reads."""
+
+    def __init__(self, **shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+# ---------------------------------------------------------------------------
+# logical_to_pspec
+# ---------------------------------------------------------------------------
+
+
+def test_batch_maps_to_data_axis():
+    m = _FakeMesh(data=4, model=2)
+    spec = logical_to_pspec((8, 16, 256), ("batch", "seq", "embed"), m)
+    assert spec == P("data", None, None)
+
+
+def test_pages_rule_shards_pool_dim():
+    """The paged-KV pool dim rides the data axis (global page ids)."""
+
+    assert DEFAULT_RULES["pages"] == ("data",)
+    m = _FakeMesh(data=4, model=2)
+    spec = logical_to_pspec(
+        (64, 16, 2, 64), ("pages", None, "kv_heads", "head_dim"), m
+    )
+    assert spec == P("data", None, "model", None)
+
+
+def test_non_divisible_dim_left_unsharded():
+    """24 heads over a 16-way model axis must not shard (divisibility guard)."""
+
+    m = _FakeMesh(data=2, model=16)
+    spec = logical_to_pspec((8, 24, 64), ("batch", "heads", "head_dim"), m)
+    assert spec == P("data", None, None)
+
+
+def test_mesh_axis_used_at_most_once():
+    """First dim claiming a mesh axis wins; later claimants stay replicated."""
+
+    m = _FakeMesh(data=4, model=2)
+    spec = logical_to_pspec((8, 8), ("batch", "expert"), m)  # both want "data"
+    assert spec == P("data", None)
+
+
+def test_multipod_batch_rule():
+    m = _FakeMesh(pod=2, data=4, model=2)
+    rules = make_rules(m)
+    assert rules["batch"] == ("pod", "data")
+    spec = logical_to_pspec((16, 256), ("batch", "embed"), m, rules)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_rule_overrides():
+    m = _FakeMesh(data=4, model=2)
+    rules = make_rules(m, {"seq": ("model",)})
+    spec = logical_to_pspec((8, 16, 256), ("batch", "seq", "embed"), m, rules)
+    assert spec == P("data", "model", None)
+
+
+def test_pspec_tree_none_axis_replicates():
+    m = _FakeMesh(data=4, model=2)
+    shapes = {"w": (8, 256), "b": (256,)}
+    logical = {"w": ("batch", None), "b": (None,)}
+    specs = pspec_tree(shapes, logical, m)
+    assert specs == {"w": P("data", None), "b": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# shard() context behavior
+# ---------------------------------------------------------------------------
+
+
+def test_shard_identity_outside_context():
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x
+
+
+def test_sharding_rules_and_no_sharding_contexts():
+    mesh = make_host_mesh()
+    x = jnp.ones((len(jax.devices()), 4))
+    with sharding_rules(mesh):
+        y = shard(x, "batch", None)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+        with no_sharding():
+            # disagg prefill traces here: shard() must be the identity again
+            assert shard(x, "batch", None) is x
+        # context restored after the nested suspension
+        z = shard(x, "batch", None)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+    assert shard(x, "batch", None) is x
+
+
+# ---------------------------------------------------------------------------
+# mesh factories
+# ---------------------------------------------------------------------------
+
+
+def test_make_host_mesh_covers_all_devices():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["data"] * mesh.shape["model"] == len(jax.devices())
+
+
+def test_make_host_mesh_shrinks_model_to_divisor():
+    n = len(jax.devices())
+    mesh = make_host_mesh(model=n + 5)  # never divides n
+    assert mesh.shape["model"] <= n
+    assert n % mesh.shape["model"] == 0
+
+
+def test_make_test_mesh_validates_device_count():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_test_mesh(data=n + 1)
+
+
+def test_make_test_mesh_exact_shape():
+    n = len(jax.devices())
+    mesh = make_test_mesh(data=n)
+    assert mesh.shape == {"data": n, "model": 1}
+
+
+def test_split_device_groups_keeps_default_device_for_decode():
+    prefill, decode = split_device_groups(prefill=1)
+    devs = jax.devices()
+    if len(devs) == 1:
+        assert prefill == decode == devs
+    else:
+        assert devs[0] in decode and devs[0] not in prefill
+        assert prefill[0] == devs[-1]
+        assert not set(prefill) & set(decode)
+
+
+# ---------------------------------------------------------------------------
+# shard-aware page allocator (pure host logic — no devices involved)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_steers_whole_request_to_one_shard():
+    a = PageAllocator(15, num_shards=4, pages_per_shard=4)
+    p1 = a.alloc(3)
+    assert len({a.shard_of(p) for p in p1}) == 1
+    p2 = a.alloc(3)  # least-loaded steering: a different shard
+    assert a.shard_of(p2[0]) != a.shard_of(p1[0])
+    assert len({a.shard_of(p) for p in p2}) == 1
+    a.free(p1)
+    a.free(p2)
+    assert a.num_free == 15
+    assert all(u == 0 for u in a.shard_in_use)
+
+
+def test_allocator_spills_oversized_request_across_shards():
+    a = PageAllocator(15, num_shards=4, pages_per_shard=4)
+    ps = a.alloc(10)  # no single shard holds 10 — must spill
+    assert len(ps) == 10
+    assert len({a.shard_of(p) for p in ps}) > 1
+    with pytest.raises(OutOfPages):
+        a.alloc(6)  # only 5 left
+    a.free(ps)
+    assert a.num_free == 15
+
+
+def test_allocator_shard_pin_and_high_water():
+    a = PageAllocator(15, num_shards=4, pages_per_shard=4)
+    ps = a.alloc(2, shard=2)
+    assert all(a.shard_of(p) == 2 for p in ps)
+    assert a.shard_in_use[2] == 2 and a.shard_high_water[2] == 2
+    a.free(ps)
+    assert a.shard_in_use[2] == 0 and a.shard_high_water[2] == 2
+    a.reset_high_water()
+    assert a.shard_high_water[2] == 0
+
+
+def test_allocator_last_shard_owns_remainder():
+    # 15 pages / 4-page shards: shard 3 owns only ids 12..14 (the pool's
+    # trailing trash page at index 15 is never the allocator's to give out)
+    a = PageAllocator(15, num_shards=4, pages_per_shard=4)
+    assert a.shard_free == [4, 4, 4, 3]
+    assert a.shard_of(14) == 3
+
+
+def test_allocator_single_shard_unchanged():
+    """Default construction must behave exactly like the old allocator."""
+
+    a = PageAllocator(6)
+    assert a.num_shards == 1
+    ps = a.alloc(4)
+    assert ps == [0, 1, 2, 3]  # lowest ids first, as before
+    a.free(ps[:2])
+    with pytest.raises(OutOfPages):
+        a.alloc(5)
+    a.reclaim_all()
+    assert a.num_free == 6
