@@ -18,7 +18,15 @@ k_max 3) and compared against the best single global cut at the same
 telemetry — the assignment is never worse by construction, and the row
 records how much the frontier saves.
 
+Every cell also carries the 2-D plan — (cut layer x placement): expert
+offload, monitor-resident prefixes, encoder staging — plus its executable
+restriction (plain cuts + expert-offload lanes).  Both are never worse
+than the 1-D plan because the 1-D cuts are a subset of the 2-D space;
+``plan2d_moved_cells`` counts the cells a placement moves off
+``cloud_only`` to a strictly faster deployment.
+
     PYTHONPATH=src python benchmarks/partition_bench.py
+    PYTHONPATH=src python benchmarks/partition_bench.py --check-2d-never-worse
 """
 
 from __future__ import annotations
@@ -63,11 +71,14 @@ def bench_rows(offload_fraction=None, out_path=None):
     rows = []
     n_split = 0
     n_hetero = 0
+    n_2d_better = 0
+    n_2d_moved = 0
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         graph = build_graph(cfg)
         cells = []
         hetero_cells = []
+        cells_2d = []
         for profile, channel in NETWORK_PROFILES.items():
             plan = plan_partition(
                 cfg, channel=channel,
@@ -77,7 +88,23 @@ def bench_rows(offload_fraction=None, out_path=None):
                 cfg, channel=channel,
                 offload_fraction=offload_fraction, graph=graph, pipelined=True,
             )
+            plan2d = plan_partition(
+                cfg, channel=channel,
+                offload_fraction=offload_fraction, graph=graph, plan_2d=True,
+            )
+            plan2d_exec = plan_partition(
+                cfg, channel=channel,
+                offload_fraction=offload_fraction, graph=graph, plan_2d=True,
+                executable_only=True,
+            )
             n_split += plan.mode == "split"
+            n_2d_better += plan2d.total_ms < plan.total_ms - 1e-9
+            moved = (
+                plan.mode == "cloud_only"
+                and plan2d.mode != "cloud_only"
+                and plan2d.total_ms < plan.total_ms - 1e-9
+            )
+            n_2d_moved += moved
             out[f"{arch}|{profile}"] = {
                 "mode": plan.mode,
                 "pipelined_mode": pipe.mode,
@@ -98,8 +125,25 @@ def bench_rows(offload_fraction=None, out_path=None):
                     round(plan.cloud_only_ms, 2)
                     if plan.cloud_only_ms is not None else None
                 ),
+                # 2-D plan: the (cut layer x placement) optimum and the
+                # executable restriction serving realizes (never worse
+                # than the 1-D total above, by construction)
+                "plan2d_mode": plan2d.mode,
+                "plan2d_placement": plan2d.placement,
+                "plan2d_cut_layer": plan2d.cut_layer,
+                "plan2d_expert_offload": list(plan2d.expert_offload),
+                "plan2d_total_ms": round(plan2d.total_ms, 2),
+                "plan2d_net_expert_ms": round(plan2d.net_expert_ms, 2),
+                "plan2d_moved_off_cloud_only": moved,
+                "plan2d_exec_mode": plan2d_exec.mode,
+                "plan2d_exec_total_ms": round(plan2d_exec.total_ms, 2),
             }
             cells.append(f"{profile}:{plan.mode}@{plan.total_ms:.0f}ms")
+            tag = plan2d.placement or plan2d.mode
+            cells_2d.append(
+                f"{profile}:{tag}@{plan2d.total_ms:.0f}ms"
+                f"({plan2d.total_ms - plan.total_ms:+.0f})"
+            )
 
             # heterogeneous fleet row: per-robot cuts vs the best single
             # global cut at the same (spread) telemetry
@@ -123,6 +167,7 @@ def bench_rows(offload_fraction=None, out_path=None):
                 f"{a.best_single_ms - a.total_ms:.0f}ms"
             )
         rows.append(f"{arch}: " + " ".join(cells))
+        rows.append(f"{arch} [2-D]: " + " ".join(cells_2d))
         rows.append(f"{arch} [hetero fleet]: " + " ".join(hetero_cells))
 
     if out_path is None:
@@ -130,6 +175,8 @@ def bench_rows(offload_fraction=None, out_path=None):
             os.path.join(os.path.dirname(__file__), "..", "BENCH_partition.json")
         )
     out["hetero_frontier_cells"] = n_hetero
+    out["plan2d_better_cells"] = n_2d_better
+    out["plan2d_moved_cells"] = n_2d_moved
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     return rows, n_split
@@ -235,7 +282,60 @@ def bench_pipelined_rows(out_path=None):
     return rows, n_ok
 
 
-def main():
+def check_2d_never_worse() -> int:
+    """CI gate: the 2-D plan (and its executable restriction) must be no
+    worse than the 1-D plan on every architecture x profile cell.
+
+    Analytic — no model build — so the full 33-cell sweep gates in
+    milliseconds.  Returns a process exit code (0 = all cells hold).
+    """
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.partition.graph import build_graph
+    from repro.partition.planner import NETWORK_PROFILES, plan_partition
+
+    f = _offload_fraction()
+    bad = []
+    n_cells = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        graph = build_graph(cfg)
+        for profile, channel in NETWORK_PROFILES.items():
+            n_cells += 1
+            p1 = plan_partition(
+                cfg, channel=channel, offload_fraction=f, graph=graph,
+            )
+            for exec_only in (False, True):
+                p2 = plan_partition(
+                    cfg, channel=channel, offload_fraction=f, graph=graph,
+                    plan_2d=True, executable_only=exec_only,
+                )
+                if p2.total_ms > p1.total_ms + 1e-9:
+                    bad.append(
+                        f"{arch}|{profile}"
+                        f"{' (executable)' if exec_only else ''}: "
+                        f"2-D {p2.total_ms:.2f}ms > 1-D {p1.total_ms:.2f}ms"
+                    )
+    if bad:
+        print(f"2-D never-worse VIOLATED on {len(bad)} cell(s):")
+        for b in bad:
+            print("   ", b)
+        return 1
+    print(f"2-D never-worse holds on all {n_cells} cells "
+          f"(plain and executable-only plans, f={f:.4f})")
+    return 0
+
+
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--check-2d-never-worse", action="store_true",
+                   help="CI gate: assert the 2-D plan is never worse than "
+                        "the 1-D plan on every arch x profile cell")
+    args = p.parse_args(argv)
+    if args.check_2d_never_worse:
+        raise SystemExit(check_2d_never_worse())
     print("name,us_per_call,derived")
     t0 = time.time()
     rows, derived = bench_rows()

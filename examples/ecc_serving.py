@@ -68,6 +68,10 @@ def main(argv=None):
                    help="'none', 'auto' (partition planner), or edge layer count")
     p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
                    help="channel regime the partition planner prices")
+    p.add_argument("--plan-2d", action="store_true",
+                   help="plan over (cut layer x placement): expert offload "
+                        "+ encoder/monitor staging; MoE fleets also serve "
+                        "an expert-offload lane alongside the planned cut")
     p.add_argument("--paged", action="store_true",
                    help="single-robot decode through the paged KV substrate")
     p.add_argument("--arrivals", default=None, choices=["poisson", "bursty"],
@@ -168,13 +172,30 @@ def main(argv=None):
         )
         executor = None
         split = []
+        robot_cuts = None
         if args.partition != "none":
             executor, _ = plan_fleet_partition(
-                model, params, args.arch, args.network
+                model, params, args.arch, args.network, plan_2d=args.plan_2d
             )
             if executor is not None:
                 split = list(range(1, args.fleet, 2))
                 print(f"mixed fleet: robots {split} serve through the split")
+            if args.plan_2d and executor is not None and split:
+                # 2-D serving on MoE archs: alternate split robots between
+                # the planned cut lane and the best expert-offload point
+                from repro.launch.serve import plan_expert_lane
+
+                lane = plan_expert_lane(
+                    model, params, args.arch, args.network, base=executor
+                )
+                if lane is not None and lane.lane_key != executor.lane_key:
+                    robot_cuts = {
+                        r: (executor.lane_key if i % 2 == 0 else lane.lane_key)
+                        for i, r in enumerate(split)
+                    }
+                    exp = [r for r, c in robot_cuts.items()
+                           if isinstance(c, tuple)]
+                    print(f"expert-offload lane robots: {exp}")
         import contextlib
 
         mesh = prefill_group = None
@@ -201,6 +222,7 @@ def main(argv=None):
                 model, params, tok, n_robots=args.fleet, max_steps=args.steps,
                 channel=NETWORK_PROFILES[args.network],
                 partition_executor=executor, split_robots=split,
+                robot_cuts=robot_cuts,
                 trigger=args.trigger, defer_hot_admission=args.defer_hot,
                 scan_rounds=args.scan_rounds, obs=mk_obs(), tick=args.tick,
                 mesh=mesh, prefill_group=prefill_group,

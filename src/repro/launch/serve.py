@@ -262,8 +262,12 @@ def serve_fleet(
     a ``{robot_id: cut_layer}`` map (e.g. from ``assign_fleet_cuts``) serves
     each listed robot through its own cut — one scheduler lane per distinct
     cut, sliced from ``partition_executor`` via ``with_cut`` — while robots
-    absent from the map stay cloud-only.  All cuts still share decode
-    rounds and the single page allocator.
+    absent from the map stay cloud-only.  Values may also be full lane
+    keys: a ``(cut, expert_offload)`` tuple routes the robot through a
+    gather/scatter expert-offload lane (edge runs attention + router, the
+    listed MoE layers' expert FFNs run cloud-side), coexisting with plain
+    cut lanes.  All lanes still share decode rounds and the single page
+    allocator.
 
     ``scan_rounds=R`` runs the scheduler's device-resident decode windows:
     each dispatch jits R decode rounds into one ``lax.scan`` (donated KV
@@ -313,7 +317,7 @@ def serve_fleet(
     deterministic per (robot, ordinal) lane).
     """
 
-    from repro.runtime.scheduler import ContinuousBatchingScheduler
+    from repro.runtime.scheduler import ContinuousBatchingScheduler, _lane_order
 
     if trigger not in ("always", "rapid"):
         raise ValueError(f"trigger must be 'always' or 'rapid', got {trigger!r}")
@@ -361,8 +365,17 @@ def serve_fleet(
     else:
         robot_cuts = dict(robot_cuts)
     if partition_executor is not None and robot_cuts:
-        for c in sorted(set(robot_cuts.values())):
-            sched.attach_partition(partition_executor.with_cut(c))
+        # values are lane keys: plain int cuts or (cut, expert_offload)
+        # tuples routing robots to expert-offload lanes at the same cut
+        for c in sorted(set(robot_cuts.values()), key=_lane_order):
+            if isinstance(c, tuple):
+                sched.attach_partition(
+                    partition_executor.with_cut(
+                        int(c[0]), expert_offload=tuple(c[1])
+                    )
+                )
+            else:
+                sched.attach_partition(partition_executor.with_cut(c))
     else:
         robot_cuts = {}
     split_set = set(robot_cuts)
@@ -486,7 +499,9 @@ def serve_fleet(
         tau_all = np.stack([ep.tau[:t_len] for ep in eps], axis=1)
         in_flight_mask = np.zeros(n_robots, bool)
         split_mask = np.zeros(n_robots, bool)
-        cut_arr = np.full(n_robots, -1, np.int64)
+        # lane keys, not plain ints: an expert-offload robot carries a
+        # (cut, offload) tuple, so the per-robot routing array is object
+        cut_arr = np.full(n_robots, None, object)
         for r, c in robot_cuts.items():
             split_mask[r] = True
             cut_arr[r] = c
@@ -598,7 +613,7 @@ def serve_fleet(
             f"(high-water {pool.high_water}) "
             + (f"mixed_rounds={sched.mixed_rounds} " if split_set else "")
             + (
-                f"cuts={sorted(set(robot_cuts.values()))} "
+                f"cuts={sorted(set(robot_cuts.values()), key=_lane_order)} "
                 f"hetero_rounds={sched.hetero_rounds} "
                 if len(set(robot_cuts.values())) > 1 else ""
             )
@@ -635,15 +650,30 @@ def serve_fleet(
         "deferred": sched.deferred,
         "split_robots": sorted(split_set),
         "robot_cuts": dict(sorted(robot_cuts.items())),
-        "active_cuts": sorted(set(robot_cuts.values())),
+        "active_cuts": sorted(set(robot_cuts.values()), key=_lane_order),
         "trigger": trigger,
         "telemetry": telemetry,
         "offload_fraction": telemetry.fleet_offload_fraction(),
     }
 
 
+def _map_expert_offload(model: Model, cut: int, n_full_offload: int):
+    """Map a full-arch offloaded-expert count onto ``model``'s edge prefix.
+
+    The planner offloads the TRAILING ``n_full_offload`` edge MoE blocks
+    (deepest first — see ``enumerate_cuts_2d``); mirror that choice on the
+    smoke stack: the trailing ``min(n, #edge MoE layers)`` MoE layers below
+    ``cut``.  Returns ``()`` when the edge prefix has no MoE layers.
+    """
+
+    moe_edge = [l for l in range(cut) if model.specs[l][1]]
+    j = min(n_full_offload, len(moe_edge))
+    return tuple(moe_edge[-j:]) if j else ()
+
+
 def plan_fleet_partition(model: Model, params, arch: str,
-                         network: str = "wan", verbose: bool = True):
+                         network: str = "wan", verbose: bool = True,
+                         plan_2d: bool = False):
     """Plan the full-arch cut and build a split executor over ``model``.
 
     Returns ``(executor_or_None, plan)``.  Only a genuine split runs through
@@ -653,6 +683,15 @@ def plan_fleet_partition(model: Model, params, arch: str,
     The plan's layer fraction is mapped onto this — possibly smoke-scale —
     model (node cut 1, a stem-only edge, maps to layer cut 0: embedding on
     the edge, every layer in the cloud).
+
+    ``plan_2d=True`` plans over (cut layer x placement).  The returned
+    ``plan`` is the headline 2-D optimum; when it picks a priced-only
+    placement (monitor-resident prefix, encoder staging), serving realizes
+    the best EXECUTABLE 2-D plan instead — plain cuts and expert-offload
+    lanes, still never worse than 1-D.  An ``expert_split`` realization
+    maps both coordinates onto ``model``: the cut by layer fraction and
+    the offloaded-expert set onto the trailing MoE layers of the edge
+    prefix (``_map_expert_offload``).
     """
 
     from repro.partition.executor import PartitionExecutor
@@ -661,23 +700,98 @@ def plan_fleet_partition(model: Model, params, arch: str,
     cfg = model.cfg
     channel = NETWORK_PROFILES[network]
     full_cfg = get_config(arch)
-    plan = plan_partition(full_cfg, channel=channel)
+    plan = plan_partition(full_cfg, channel=channel, plan_2d=plan_2d)
     if verbose:
         print(f"partition plan [{network}]:", plan.summary())
-    if plan.mode != "split" or cfg.encoder_decoder:
+    exec_plan = plan
+    if plan_2d and plan.placement not in ("", "experts_cloud"):
+        # monitor / encoder placements are priced by the planner but have
+        # no split-executor realization yet: serve the best plan over the
+        # executable placements instead
+        exec_plan = plan_partition(
+            full_cfg, channel=channel, plan_2d=True, executable_only=True
+        )
+        if verbose:
+            print(f"  executable 2-D plan:", exec_plan.summary())
+    if exec_plan.mode not in ("split", "expert_split") or cfg.encoder_decoder:
         if verbose:
             why = (
                 "encoder-decoder split execution not supported"
-                if plan.mode == "split"
-                else f"planner chose {plan.mode}"
+                if exec_plan.mode in ("split", "expert_split")
+                else f"planner chose {exec_plan.mode}"
             )
             print(f"{why}: serving unpartitioned")
         return None, plan
-    frac = plan.cut_layer / max(full_cfg.num_layers, 1)
+    frac = exec_plan.cut_layer / max(full_cfg.num_layers, 1)
     cut = int(round(frac * cfg.num_layers))
+    offload = (
+        _map_expert_offload(model, cut, len(exec_plan.expert_offload))
+        if exec_plan.expert_offload else ()
+    )
     if verbose:
-        print(f"split execution: {cut}/{cfg.num_layers} layers on the edge")
-    return PartitionExecutor(model, params, cut, channel=channel), plan
+        off = f", experts of layers {list(offload)} cloud-side" if offload else ""
+        print(f"split execution: {cut}/{cfg.num_layers} layers on the edge{off}")
+    return PartitionExecutor(model, params, cut, channel=channel,
+                             expert_offload=offload), plan
+
+
+def plan_expert_lane(model: Model, params, arch: str, network: str = "wan",
+                     base=None, verbose: bool = True):
+    """Build the 2-D plan's best expert-offload lane, mapped onto ``model``.
+
+    Scores the full ``arch``'s (cut x expert placement) space and picks the
+    best FEASIBLE ``experts_cloud`` point — the coordinate that moves MoE
+    expert residency cloudward at the smallest gather/scatter price.
+    Expert offload is a memory-feasibility axis: each offloaded block pays
+    per-token channel legs, so it rarely wins total latency outright —
+    mixed fleets therefore serve it ALONGSIDE the planned layer cut, and
+    the scheduler shares decode rounds across both lane kinds.
+
+    Returns a ``PartitionExecutor`` whose ``lane_key`` is the
+    ``(cut, offload)`` tuple, or ``None`` when the arch (or the smoke
+    model's edge prefix) has no MoE blocks to offload.  ``base`` shares its
+    parameter slices via ``with_cut``.
+    """
+
+    from repro.partition.executor import PartitionExecutor
+    from repro.partition.graph import build_graph
+    from repro.partition.planner import NETWORK_PROFILES, enumerate_cuts_2d
+    from repro.runtime.latency import arch_hardware_model
+
+    cfg = model.cfg
+    if cfg.encoder_decoder or cfg.moe is None:
+        return None
+    channel = NETWORK_PROFILES[network]
+    full_cfg = get_config(arch)
+    graph = build_graph(full_cfg)
+    hw = arch_hardware_model(int(graph.total_param_bytes))
+    cand = [
+        e for e in enumerate_cuts_2d(graph, hw, channel)
+        if e.feasible and e.placement == "experts_cloud"
+    ]
+    if not cand:
+        return None
+    best = min(cand, key=lambda e: e.total_ms)
+    full_layers = max(full_cfg.num_layers, 1)
+    cut = min(
+        max(int(round(graph.cut_layers(best.cut) / full_layers
+                      * cfg.num_layers)), 1),
+        cfg.num_layers,
+    )
+    offload = _map_expert_offload(model, cut, len(best.expert_offload))
+    if not offload:
+        return None
+    if verbose:
+        print(
+            f"expert-offload lane [{network}]: cut {cut}, experts of layers "
+            f"{list(offload)} cloud-side (full-arch: "
+            f"{len(best.expert_offload)} MoE block(s) at cut {best.cut}, "
+            f"{best.total_ms:.1f}ms, +{best.net_expert_ms:.1f}ms legs)"
+        )
+    if base is not None:
+        return base.with_cut(cut, expert_offload=offload)
+    return PartitionExecutor(model, params, cut, channel=channel,
+                             expert_offload=offload)
 
 
 def assign_fleet_cuts(model: Model, params, arch: str, telemetry,
@@ -800,7 +914,8 @@ def replan_from_telemetry(arch: str, telemetry, network: str = "wan",
 
 def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
                  partition: str = "none", network: str = "wan",
-                 paged: bool = False, verbose: bool = True):
+                 paged: bool = False, plan_2d: bool = False,
+                 verbose: bool = True):
     """Build the serving policy, optionally split per the partition planner.
 
     ``partition``: ``"none"`` (single-device CloudPolicy), ``"auto"`` (plan
@@ -810,6 +925,8 @@ def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
     regime the planner prices (``lan`` / ``wan`` / ``congested``).
     ``paged`` routes the unpartitioned policy's decode through the paged KV
     substrate instead of dense per-slot slabs (identical greedy chunks).
+    ``plan_2d`` (with ``"auto"``) plans over (cut layer x placement) and
+    realizes the best executable 2-D plan — see ``plan_fleet_partition``.
     """
 
     if partition == "none":
@@ -820,7 +937,7 @@ def build_policy(model: Model, params, tok: EpisodeTokenizer, arch: str,
 
     if partition == "auto":
         executor, plan = plan_fleet_partition(
-            model, params, arch, network, verbose=verbose
+            model, params, arch, network, verbose=verbose, plan_2d=plan_2d
         )
         if executor is None:
             return CloudPolicy(model, params, tok, paged=paged), plan
@@ -848,6 +965,10 @@ def main(argv=None):
                    help="'none', 'auto' (partition planner), or edge layer count")
     p.add_argument("--network", default="wan", choices=["lan", "wan", "congested"],
                    help="channel regime the partition planner prices")
+    p.add_argument("--plan-2d", action="store_true",
+                   help="plan over (cut layer x placement): expert offload "
+                        "+ encoder/monitor staging; MoE fleets also serve "
+                        "an expert-offload lane alongside the planned cut")
     p.add_argument("--paged", action="store_true",
                    help="single-robot decode through the paged KV substrate")
     p.add_argument("--trigger", default="always", choices=["always", "rapid"],
@@ -897,14 +1018,28 @@ def main(argv=None):
         )
         executor = None
         split = []
+        robot_cuts = None
         if args.partition != "none":
             # mixed fleet: every second robot serves through the planned
             # edge-cloud split; they share decode rounds with the rest
             executor, _ = plan_fleet_partition(
-                model, params, args.arch, args.network
+                model, params, args.arch, args.network, plan_2d=args.plan_2d
             )
             if executor is not None:
                 split = list(range(1, args.fleet, 2))
+            if args.plan_2d and executor is not None and split:
+                # 2-D serving demo on MoE archs: alternate the split robots
+                # between the planned cut lane and the 2-D space's best
+                # expert-offload point, so layer-cut and gather/scatter
+                # lanes genuinely share decode rounds
+                lane = plan_expert_lane(
+                    model, params, args.arch, args.network, base=executor
+                )
+                if lane is not None and lane.lane_key != executor.lane_key:
+                    robot_cuts = {
+                        r: (executor.lane_key if i % 2 == 0 else lane.lane_key)
+                        for i, r in enumerate(split)
+                    }
         mesh = prefill_group = None
         if args.disaggregate_prefill:
             from repro.launch.mesh import split_device_groups
@@ -923,6 +1058,7 @@ def main(argv=None):
         out = serve_fleet(
             model, params, tok, n_robots=args.fleet, max_steps=args.steps,
             partition_executor=executor, split_robots=split,
+            robot_cuts=robot_cuts,
             trigger=args.trigger, defer_hot_admission=args.defer_hot,
             scan_rounds=args.scan_rounds, obs=mk_obs(),
             mesh=mesh, prefill_group=prefill_group,

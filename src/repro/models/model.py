@@ -226,9 +226,22 @@ class Model:
                    chunked=False):
         """Full-sequence block apply.  Returns (x, new_cache, aux)."""
 
+        x, new_cache = self._block_mix_seq(
+            spec, p, x, positions, cache, enc_out, enc_pos, chunked=chunked
+        )
+        x, aux = self._block_ffn(spec, p, x)
+        return x, new_cache, aux
+
+    def _block_mix_seq(self, spec, p, x, positions, cache, enc_out=None,
+                       enc_pos=None, chunked=False):
+        """The mixer half of ``_block_seq`` (everything before the FFN/MoE
+        sub-block).  Split out so the partition executor's gather/scatter
+        expert mode can interpose the channel at the MoE seam; ``_block_seq``
+        recomposes the two halves, so the fused and split forms trace the
+        same jaxpr."""
+
         cfg = self.cfg
         blk, is_moe, _ = spec
-        aux = jnp.zeros((), jnp.float32)
         window = self._window_for(spec, x.shape[1])
         h = rms_norm(x, p["norm1"], cfg.norm_eps)
         dummy = isinstance(cache, dict) and "_" in cache
@@ -281,6 +294,15 @@ class Model:
                 new_cache = dict(new_cache)
                 new_cache["xk"] = xk.astype(new_cache["xk"].dtype)
                 new_cache["xv"] = xv.astype(new_cache["xv"].dtype)
+        return x, new_cache
+
+    def _block_ffn(self, spec, p, x):
+        """The FFN/MoE half of a block: norm2 + (expert mixture | MLP) +
+        residual.  Returns (x, aux)."""
+
+        cfg = self.cfg
+        _, is_moe, _ = spec
+        aux = jnp.zeros((), jnp.float32)
         if cfg.d_ff > 0:
             h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
             if is_moe:
@@ -293,7 +315,24 @@ class Model:
             else:
                 out2 = mlp(h2, p["mlp"], cfg.mlp_activation, cfg.gated_mlp)
             x = x + out2
-        return x, new_cache, aux
+        return x, aux
+
+    def _moe_pre_dispatch(self, p, x):
+        """Edge-side half of a gather/scatter MoE split: norm2 + router.
+
+        Returns ``(h2, combine)`` — the hidden states and top-k combine
+        weights a gather/scatter partition ships cloudward, where
+        ``moe_lib.moe_apply_experts`` finishes the mixture.  Chaining the
+        two reproduces the dense ``moe_forward`` op-for-op (the aux loss is
+        inference-irrelevant and dropped)."""
+
+        cfg = self.cfg
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        combine, _ = moe_lib.router_probs(
+            h2, p["moe"]["router"], cfg.moe.num_experts_per_tok
+        )
+        combine = shard(combine, "batch", "act_seq", None)
+        return h2, combine
 
     def _block_step(self, spec, p, x, cache, cache_len, enc_out=None, enc_pos=None,
                     paged=None):
@@ -304,6 +343,16 @@ class Model:
         dense per-slot slabs; non-attention block state is identical in both
         modes.  Dense mode (``paged=None``) is the parity oracle.
         """
+
+        x, new_cache = self._block_mix_step(
+            spec, p, x, cache, cache_len, enc_out, enc_pos, paged=paged
+        )
+        x, _ = self._block_ffn(spec, p, x)
+        return x, new_cache
+
+    def _block_mix_step(self, spec, p, x, cache, cache_len, enc_out=None,
+                        enc_pos=None, paged=None):
+        """Mixer half of ``_block_step`` (pre-FFN) — see ``_block_mix_seq``."""
 
         cfg = self.cfg
         blk, is_moe, _ = spec
@@ -345,18 +394,6 @@ class Model:
                     hx, p["xattn"], cfg, None, pos, 0, kv_override=(enc_out, enc_pos), impl="xla"
                 )
             x = x + out
-        if cfg.d_ff > 0:
-            h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
-            if is_moe:
-                moe_fn = (
-                    moe_lib.moe_forward_capacity
-                    if self.moe_impl == "capacity"
-                    else moe_lib.moe_forward
-                )
-                out2, _ = moe_fn(h2, p["moe"], cfg)
-            else:
-                out2 = mlp(h2, p["mlp"], cfg.mlp_activation, cfg.gated_mlp)
-            x = x + out2
         return x, new_cache
 
     # ------------------------------------------------------------------

@@ -61,22 +61,17 @@ def router_probs(x: jax.Array, router_w: jax.Array, k: int):
     return combine, aux
 
 
-def moe_forward(x: jax.Array, params, cfg: ModelConfig):
-    """x [B,S,D] -> ([B,S,D], aux_loss).
+def moe_apply_experts(x: jax.Array, combine: jax.Array, params, cfg: ModelConfig):
+    """Apply the expert FFNs under precomputed combine weights.
 
-    Baseline ("dense-compute") formulation: every expert processes every
-    token and the top-k combine weights zero out non-selected outputs —
-    numerically identical to gather/scatter dispatch, trivially correct
-    under GSPMD, but costs E/k more FLOPs than necessary.  The experts are
-    *streamed* with a lax.scan so the [B,S,E,F] intermediate never
-    materializes (memory-feasible at trillion-FLOP scale).  The
-    capacity-based top-k dispatch (`moe_forward_capacity`) is the §Perf
-    optimized path.
+    ``x`` [B,S,D] and ``combine`` [B,S,E] (top-k softmax weights from
+    ``router_probs``) -> expert-mixture output [B,S,D].  This is the
+    expert-application half of ``moe_forward``, split out so the partition
+    executor's gather/scatter mode can run the router edge-side and the
+    expert FFNs cloud-side through the *same* scan — the split is
+    bit-identical to the fused forward by construction.
     """
 
-    m = cfg.moe
-    combine, aux = router_probs(x, params["router"], m.num_experts_per_tok)
-    combine = shard(combine, "batch", "act_seq", None)
     xe = x
 
     @jax.checkpoint  # recompute the expert FFN in backward: per-expert
@@ -102,7 +97,26 @@ def moe_forward(x: jax.Array, params, cfg: ModelConfig):
         else (params["up"], params["down"], cmb_e)
     )
     out, _ = jax.lax.scan(one_expert, jnp.zeros_like(xe), xs)
-    return out.astype(x.dtype), aux
+    return out.astype(x.dtype)
+
+
+def moe_forward(x: jax.Array, params, cfg: ModelConfig):
+    """x [B,S,D] -> ([B,S,D], aux_loss).
+
+    Baseline ("dense-compute") formulation: every expert processes every
+    token and the top-k combine weights zero out non-selected outputs —
+    numerically identical to gather/scatter dispatch, trivially correct
+    under GSPMD, but costs E/k more FLOPs than necessary.  The experts are
+    *streamed* with a lax.scan so the [B,S,E,F] intermediate never
+    materializes (memory-feasible at trillion-FLOP scale).  The
+    capacity-based top-k dispatch (`moe_forward_capacity`) is the §Perf
+    optimized path.
+    """
+
+    m = cfg.moe
+    combine, aux = router_probs(x, params["router"], m.num_experts_per_tok)
+    combine = shard(combine, "batch", "act_seq", None)
+    return moe_apply_experts(x, combine, params, cfg), aux
 
 
 def moe_forward_capacity(x: jax.Array, params, cfg: ModelConfig, capacity_factor=None):

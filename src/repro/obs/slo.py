@@ -17,6 +17,9 @@ Canonical metric names (producers must agree with these):
   * ``fleet.fires/replays/preempts`` — decision-core counters
   * ``pool.pages_in_use/high_water/page_allocs_total/...`` — KV pool
   * ``serve.wall_s``            — episode wall seconds (goodput basis)
+  * ``channel.bytes_up/down{leg=...}`` — modeled split-serving channel
+    bytes per direction and leg (cut-activation, expert-gather,
+    expert-scatter)
 """
 
 from __future__ import annotations
@@ -48,6 +51,17 @@ def _gauge(metrics: MetricsRegistry, name: str, high: bool = False,
     return float(g.high if high else g.value)
 
 
+def _leg_counters(metrics: MetricsRegistry, name: str) -> Dict[str, int]:
+    """All ``name{leg="..."}`` counters as ``{leg: value}`` (sorted keys)."""
+
+    prefix = name + '{leg="'
+    return {
+        key[len(prefix):-2]: int(m.value)
+        for key, m in metrics.items()
+        if key.startswith(prefix) and isinstance(m, Counter)
+    }
+
+
 @dataclass
 class SLOReport:
     """Percentiles + rates for one serving run (all times milliseconds)."""
@@ -72,6 +86,11 @@ class SLOReport:
     # the engine ran single-shard)
     pool_shard_in_use: List[int] = field(default_factory=list)
     pool_shard_high_water: List[int] = field(default_factory=list)
+    # split serving only: modeled channel bytes per direction, keyed by leg
+    # (cut-activation / expert-gather / expert-scatter); empty dicts when
+    # no partitioned robot completed a chunk
+    channel_bytes_up: Dict[str, int] = field(default_factory=dict)
+    channel_bytes_down: Dict[str, int] = field(default_factory=dict)
 
     def to_json(self) -> Dict[str, object]:
         rd = lambda d: {k: round(float(v), 4) for k, v in d.items()}
@@ -94,6 +113,8 @@ class SLOReport:
             "pool_page_frees": self.pool_page_frees,
             "pool_shard_in_use": list(self.pool_shard_in_use),
             "pool_shard_high_water": list(self.pool_shard_high_water),
+            "channel_bytes_up": dict(self.channel_bytes_up),
+            "channel_bytes_down": dict(self.channel_bytes_down),
         }
 
     def lines(self) -> List[str]:
@@ -118,6 +139,14 @@ class SLOReport:
             [f"SLO kv shards: in_use={self.pool_shard_in_use} "
              f"high_water={self.pool_shard_high_water}"]
             if self.pool_shard_in_use else []
+        ) + (
+            ["SLO channel bytes: up={"
+             + ", ".join(f"{k}: {v}" for k, v in self.channel_bytes_up.items())
+             + "} down={"
+             + ", ".join(f"{k}: {v}"
+                         for k, v in self.channel_bytes_down.items())
+             + "}"]
+            if self.channel_bytes_up or self.channel_bytes_down else []
         )
 
 
@@ -156,4 +185,6 @@ def build_slo_report(metrics: MetricsRegistry) -> SLOReport:
                        high=True))
             for s in range(int(_gauge(metrics, "pool.num_shards")))
         ],
+        channel_bytes_up=_leg_counters(metrics, "channel.bytes_up"),
+        channel_bytes_down=_leg_counters(metrics, "channel.bytes_down"),
     )

@@ -20,6 +20,7 @@ from repro.partition.planner import (
     PartitionPlan,
     assign_cuts,
     enumerate_cuts,
+    enumerate_cuts_2d,
     plan_partition,
 )
 from repro.partition.executor import PartitionExecutor, PartitionedPolicy
@@ -34,6 +35,7 @@ __all__ = [
     "PartitionPlan",
     "assign_cuts",
     "enumerate_cuts",
+    "enumerate_cuts_2d",
     "plan_partition",
     "PartitionExecutor",
     "PartitionedPolicy",

@@ -37,9 +37,10 @@ from repro.data.pipeline import EpisodeTokenizer
 from repro.launch.sharding import shard
 from repro.models.layers import embed_lookup, rms_norm
 from repro.models.model import Model
+from repro.models.moe import moe_apply_experts
 from repro.obs.clock import clock
-from repro.partition.planner import interior_net_ms
-from repro.runtime.channel import ChannelConfig
+from repro.partition.planner import TOKEN_ID_BYTES, interior_net_ms
+from repro.runtime.channel import ChannelConfig, roundtrip_ms
 from repro.runtime.kv_cache import donating_jit, scatter_prompt_into_pool
 
 
@@ -51,6 +52,17 @@ class PartitionExecutor:
     parameter slices (jax arrays are immutable, the edge/cloud tuples are
     views), so a frontier of k cuts costs one slicing pass plus k cheap
     boundary re-partitions — not k copies of the model.
+
+    ``expert_offload`` lists edge-side MoE layer indices whose EXPERT FFNs
+    live cloud-side (the planner's second placement axis): the edge runs
+    the layer's attention + router, ships the top-k-selected hidden states
+    cloudward, the cloud applies the resident expert FFNs
+    (``moe_apply_experts`` — the literal scan the fused model runs) and
+    ships the mixture output back.  The serial robot-side path
+    (``edge_prefill`` / ``edge_step``) realizes the hop as separate edge /
+    cloud programs chained through the host; the fused pipelined window
+    keeps the seam structural (same ops, one program) and prices the legs
+    via ``modeled_net_ms`` / ``record_chunk_bytes``, like the cut itself.
     """
 
     def __init__(
@@ -59,6 +71,7 @@ class PartitionExecutor:
         params,
         cut_layer: int,
         channel: Optional[ChannelConfig] = None,
+        expert_offload: Tuple[int, ...] = (),
         _shared: Optional[Tuple[tuple, Dict[str, Any]]] = None,
     ):
         cfg = model.cfg
@@ -70,10 +83,25 @@ class PartitionExecutor:
         self.cfg = cfg
         self.cut_layer = cut_layer
         self.channel = channel or ChannelConfig()
+        self.expert_offload = tuple(sorted({int(l) for l in expert_offload}))
+        self._offload_set = frozenset(self.expert_offload)
+        for l in self.expert_offload:
+            if not 0 <= l < cut_layer:
+                raise ValueError(
+                    f"expert_offload layer {l} not edge-side of cut {cut_layer}"
+                )
+            if not (model.specs[l][1] and cfg.d_ff > 0 and cfg.moe is not None):
+                raise ValueError(f"expert_offload layer {l} is not an MoE layer")
+        if self.expert_offload and model.moe_impl != "dense":
+            raise ValueError(
+                "gather/scatter expert offload splits the dense MoE path; "
+                "capacity dispatch keeps experts fused"
+            )
         self.shipped_bytes = 0.0
         # optional Observability handle (attach_partition sets it): when
         # present, the serial ping-pong legs record per-cut dispatch times
         self.obs = None
+        self._gs_fns: Dict[Any, Any] = {}  # host-composed gather/scatter jits
 
         if _shared is None:
             # per-layer params with the stacked repeats dim sliced out
@@ -98,17 +126,36 @@ class PartitionExecutor:
         self.edge_specs = model.specs[:cut_layer]
         self.cloud_specs = model.specs[cut_layer:]
 
-    def with_cut(self, cut_layer: int) -> "PartitionExecutor":
-        """A sibling executor at ``cut_layer`` sharing the sliced params."""
+    def with_cut(
+        self, cut_layer: int, expert_offload: Tuple[int, ...] = ()
+    ) -> "PartitionExecutor":
+        """A sibling executor at ``cut_layer`` sharing the sliced params.
 
-        if cut_layer == self.cut_layer:
+        ``expert_offload`` does NOT inherit: a sibling is a fresh lane, and
+        an offload set valid under one cut may be out of range under
+        another — pass it explicitly to derive an expert-offload lane.
+        """
+
+        expert_offload = tuple(sorted({int(l) for l in expert_offload}))
+        if cut_layer == self.cut_layer and expert_offload == self.expert_offload:
             return self
         sibling = PartitionExecutor(
-            self.model, None, cut_layer, self.channel,
+            self.model, None, cut_layer, self.channel, expert_offload,
             _shared=(self._per_layer, self._base),
         )
         sibling.obs = self.obs
         return sibling
+
+    @property
+    def lane_key(self):
+        """Scheduler lane-registry key: the plain cut for pure layer cuts
+        (backwards compatible with cut-keyed callers), ``(cut, offload)``
+        for expert-offload lanes — two lanes may then share a cut boundary
+        while keeping distinct channel pricing and telemetry."""
+
+        if self.expert_offload:
+            return (self.cut_layer, self.expert_offload)
+        return self.cut_layer
 
     # ------------------------------------------------------------------
     # full-sequence split forward (the parity surface)
@@ -120,12 +167,48 @@ class PartitionExecutor:
             x, _, _ = self.model._block_seq(spec, p, x, positions, dummy)
         return x
 
+    # -- gather/scatter seam: edge blocks with offloaded expert FFNs -------
+    #
+    # An offloaded MoE layer runs as mixer -> (norm2 + router) -> expert
+    # scan -> residual, which recomposes the dense ``moe_forward`` op-for-op
+    # (see ``Model._moe_pre_dispatch``): the split numbers equal the fused
+    # numbers bit-for-bit, the parity the gather/scatter tests pin.
+
+    def _edge_seq_blocks(self, sp, x, positions, caches):
+        """Edge prefix, full-sequence mode -> (x, new caches)."""
+
+        new = []
+        for j, (spec, p, c) in enumerate(zip(self.edge_specs, sp["edge"], caches)):
+            if j in self._offload_set:
+                x, nc = self.model._block_mix_seq(spec, p, x, positions, c)
+                h2, combine = self.model._moe_pre_dispatch(p, x)
+                x = x + moe_apply_experts(h2, combine, p["moe"], self.cfg)
+            else:
+                x, nc, _ = self.model._block_seq(spec, p, x, positions, c)
+            new.append(nc)
+        return x, new
+
+    def _edge_step_blocks(self, sp, x, caches, length):
+        """Edge prefix, single-token decode mode -> (x, new caches)."""
+
+        new = []
+        for j, (spec, p, c) in enumerate(zip(self.edge_specs, sp["edge"], caches)):
+            if j in self._offload_set:
+                x, nc = self.model._block_mix_step(spec, p, x, c, length)
+                h2, combine = self.model._moe_pre_dispatch(p, x)
+                x = x + moe_apply_experts(h2, combine, p["moe"], self.cfg)
+            else:
+                x, nc = self.model._block_step(spec, p, x, c, length)
+            new.append(nc)
+        return x, new
+
     def edge_forward(self, batch) -> Tuple[jax.Array, jax.Array]:
         """Stem + edge prefix -> (cut activations [B,S,D], positions)."""
 
         x = self.model._embed_inputs(self.split_params, batch)
         positions = jnp.arange(x.shape[1])[None, :]
-        x = self._run_side(self.edge_specs, self.split_params["edge"], x, positions)
+        dummy = [{"_": jnp.zeros((), jnp.float32)}] * len(self.edge_specs)
+        x, _ = self._edge_seq_blocks(self.split_params, x, positions, dummy)
         return x, positions
 
     def cloud_forward(self, x, positions) -> jax.Array:
@@ -172,7 +255,7 @@ class PartitionExecutor:
 
         edge_caches = self._init_side_caches(self.edge_specs, b, s + extra)
         cloud_caches = self._init_side_caches(self.cloud_specs, b, s + extra)
-        x, edge_caches = run(self.edge_specs, sp["edge"], edge_caches, x)
+        x, edge_caches = self._edge_seq_blocks(sp, x, positions, edge_caches)
         x, cloud_caches = run(self.cloud_specs, sp["cloud"], cloud_caches, x)
         x = rms_norm(x, sp["final_norm"], self.cfg.norm_eps)
         logits = self.model._logits(sp, x[:, -1:])
@@ -197,7 +280,7 @@ class PartitionExecutor:
                 new.append(nc)
             return x, new
 
-        x, edge_caches = run(self.edge_specs, sp["edge"], state["edge"], x)
+        x, edge_caches = self._edge_step_blocks(sp, x, state["edge"], state["len"])
         x, cloud_caches = run(self.cloud_specs, sp["cloud"], state["cloud"], x)
         x = rms_norm(x, sp["final_norm"], cfg.norm_eps)
         logits = self.model._logits(sp, x)
@@ -348,10 +431,15 @@ class PartitionExecutor:
     def edge_prefill(self, tokens: np.ndarray):
         """Robot-side prompt prefill -> (cut activations [1,S,D], edge caches)."""
 
+        run = (
+            self._gs_edge_prefill
+            if self.expert_offload
+            else lambda t: self._edge_prefill_j(self.split_params, jnp.asarray(t))
+        )
         if self.obs is None:
-            return self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+            return run(tokens)
         t0 = clock()
-        out = self._edge_prefill_j(self.split_params, jnp.asarray(tokens))
+        out = run(tokens)
         self._stamp("edge", "prefill", t0)
         return out
 
@@ -362,30 +450,25 @@ class PartitionExecutor:
         caches = self._init_side_caches(
             self.edge_specs, tokens.shape[0], x.shape[1] + self._edge_extra
         )
-        new = []
-        for spec, p, c in zip(self.edge_specs, sp["edge"], caches):
-            x, nc, _ = self.model._block_seq(spec, p, x, positions, c)
-            new.append(nc)
-        return x, new
+        return self._edge_seq_blocks(sp, x, positions, caches)
 
     def edge_step(self, token: int, caches, length: int):
         """One robot-side ping-pong leg: embed the sampled token, run the
         edge prefix -> (cut activation [1,1,D], new edge caches)."""
 
-        if self.obs is None:
-            return self._edge_step_j(
+        if self.expert_offload:
+            run = lambda: self._gs_edge_step(token, caches, length)
+        else:
+            run = lambda: self._edge_step_j(
                 self.split_params,
                 jnp.asarray([[token]], jnp.int32),
                 caches,
                 jnp.asarray(length, jnp.int32),
             )
+        if self.obs is None:
+            return run()
         t0 = clock()
-        out = self._edge_step_j(
-            self.split_params,
-            jnp.asarray([[token]], jnp.int32),
-            caches,
-            jnp.asarray(length, jnp.int32),
-        )
+        out = run()
         self._stamp("edge", "step", t0)
         return out
 
@@ -393,11 +476,96 @@ class PartitionExecutor:
         cfg = self.cfg
         x = embed_lookup(token, sp["embed"], cfg.d_model, cfg.scale_embeddings)
         x = x.astype(self.model.dtype)
+        return self._edge_step_blocks(sp, x, caches, length)
+
+    # ------------------------------------------------------------------
+    # host-composed gather/scatter legs (serial robot-side path)
+    # ------------------------------------------------------------------
+    #
+    # With experts offloaded, the robot-side entry points run as separate
+    # edge / cloud PROGRAMS chained through the host — the deployment shape
+    # the planner prices: one edge segment per stretch of resident layers,
+    # the cloud expert program (``moe_apply_experts``) between them.  The
+    # whole-edge jits above stay the single-program reference.
+
+    def _gs_jit(self, key, make):
+        fn = self._gs_fns.get(key)
+        if fn is None:
+            fn = jax.jit(make())
+            self._gs_fns[key] = fn
+        return fn
+
+    def _gs_block_calls(self, sp, x, caches, positions=None, length=None):
+        """Run the edge prefix as per-layer host-dispatched programs.
+
+        ``positions`` selects full-sequence mode, ``length`` decode mode.
+        Offloaded layers hop: edge mixer+router program -> cloud expert
+        program -> edge residual add, three dispatches with the shipped
+        tensors ((h2, combine) up, the mixture output down) crossing the
+        host exactly where the channel would sit.
+        """
+
+        seq = positions is not None
         new = []
-        for spec, p, c in zip(self.edge_specs, sp["edge"], caches):
-            x, nc = self.model._block_step(spec, p, x, c, length)
+        for j, (spec, p, c) in enumerate(zip(self.edge_specs, sp["edge"], caches)):
+            if j in self._offload_set:
+                if seq:
+                    mix = self._gs_jit(("mix_seq", j), lambda spec=spec: (
+                        lambda p, x, pos, c: self.model._block_mix_seq(spec, p, x, pos, c)
+                    ))
+                    x, nc = mix(p, x, positions, c)
+                else:
+                    mix = self._gs_jit(("mix_step", j), lambda spec=spec: (
+                        lambda p, x, c, n: self.model._block_mix_step(spec, p, x, c, n)
+                    ))
+                    x, nc = mix(p, x, c, length)
+                pre = self._gs_jit("pre_dispatch", lambda: self.model._moe_pre_dispatch)
+                h2, combine = pre(p, x)
+                # >>> uplink: top-k-selected hidden states + combine weights
+                experts = self._gs_jit("experts", lambda: (
+                    lambda moe_p, h2, cmb: moe_apply_experts(h2, cmb, moe_p, self.cfg)
+                ))
+                out2 = experts(p["moe"], h2, combine)
+                # <<< downlink: expert-mixture output
+                add = self._gs_jit("residual", lambda: (lambda a, b: a + b))
+                x = add(x, out2)
+            elif seq:
+                blk = self._gs_jit(("blk_seq", j), lambda spec=spec: (
+                    lambda p, x, pos, c: self.model._block_seq(spec, p, x, pos, c)[:2]
+                ))
+                x, nc = blk(p, x, positions, c)
+            else:
+                blk = self._gs_jit(("blk_step", j), lambda spec=spec: (
+                    lambda p, x, c, n: self.model._block_step(spec, p, x, c, n)
+                ))
+                x, nc = blk(p, x, c, length)
             new.append(nc)
         return x, new
+
+    def _gs_edge_prefill(self, tokens):
+        sp = self.split_params
+        tokens = jnp.asarray(tokens)
+        emb = self._gs_jit("embed", lambda: (
+            lambda sp, t: self.model._embed_inputs(sp, {"tokens": t})
+        ))
+        x = emb(sp, tokens)
+        positions = jnp.arange(x.shape[1])[None, :]
+        caches = self._init_side_caches(
+            self.edge_specs, tokens.shape[0], x.shape[1] + self._edge_extra
+        )
+        return self._gs_block_calls(sp, x, caches, positions=positions)
+
+    def _gs_edge_step(self, token, caches, length):
+        sp = self.split_params
+        emb = self._gs_jit("embed_step", lambda: (
+            lambda sp, t: embed_lookup(
+                t, sp["embed"], self.cfg.d_model, self.cfg.scale_embeddings
+            ).astype(self.model.dtype)
+        ))
+        x = emb(sp, jnp.asarray([[token]], jnp.int32))
+        return self._gs_block_calls(
+            sp, x, caches, length=jnp.asarray(length, jnp.int32)
+        )
 
     def suffix_prefill(self, x, layers, pt_new, row_idx, lens, caps):
         """Cloud-side prefill over a batch of shipped cut activations.
@@ -481,10 +649,18 @@ class PartitionExecutor:
     # ------------------------------------------------------------------
 
     def build_fleet_decode(self, cuts: Tuple[int, ...], n_steps: int,
-                           token_floor: int):
+                           token_floor: int,
+                           offloads: Optional[Tuple[Tuple[int, ...], ...]] = None):
         """One jitted window of pipelined split decode over a fleet of lanes.
 
-        ``cuts`` lists the active lanes' cut layers, ascending and unique;
+        ``cuts`` lists the active lanes' cut layers, ascending (duplicates
+        allowed: a plain layer-cut lane and an expert-offload lane may share
+        a boundary — both join the suffix batch at the same layer);
+        ``offloads`` optionally gives each lane's offloaded-expert layer
+        set, whose blocks run through the gather/scatter seam (mixer →
+        router → ``moe_apply_experts`` → residual; the same ops the fused
+        block traces, so mixed lanes decode bit-identically — placement
+        changes modeled channel cost and telemetry, not tokens);
         the returned fn runs ``n_steps`` (argmax → edge prefix → cloud
         suffix) iterations in a single ``lax.scan`` with no host sync —
         the executor-side realization of the planner's pipelined pricing:
@@ -523,6 +699,10 @@ class PartitionExecutor:
         num_layers = cfg.num_layers
         first = cuts[0]
         n_lanes = len(cuts)
+        off_sets = tuple(
+            frozenset(offloads[li]) if offloads else frozenset()
+            for li in range(n_lanes)
+        ) if offloads else (frozenset(),) * n_lanes
 
         def fleet(per_layer, base, pools, lanes, pts, caps):
             def body(carry, _):
@@ -541,10 +721,20 @@ class PartitionExecutor:
                     ).astype(model.dtype)
                     ecs = []
                     for j in range(cuts[li]):
-                        x, nc = model._block_step(
-                            specs[j], per_layer[j], x, lane["edge"][j],
-                            lane["lens"],
-                        )
+                        if j in off_sets[li]:
+                            x, nc = model._block_mix_step(
+                                specs[j], per_layer[j], x, lane["edge"][j],
+                                lane["lens"],
+                            )
+                            h2, combine = model._moe_pre_dispatch(per_layer[j], x)
+                            x = x + moe_apply_experts(
+                                h2, combine, per_layer[j]["moe"], cfg
+                            )
+                        else:
+                            x, nc = model._block_step(
+                                specs[j], per_layer[j], x, lane["edge"][j],
+                                lane["lens"],
+                            )
                         ecs.append(nc)
                     edges_new.append(ecs)
                     xs.append(x)
@@ -631,10 +821,55 @@ class PartitionExecutor:
         Zero when a side is empty in the LAYER dimension only if the stem /
         head still separate — the stem is always edge-resident here, so
         every call ships at least the embedded prompt.
+
+        Expert-offload lanes add the per-MoE-block gather/scatter legs
+        (the planner's pricing): one prefill round-trip over the prompt's
+        top-k hidden states, plus one per decode token.
         """
 
         act_tok = self.cfg.d_model * 2.0  # bf16 activations
-        return interior_net_ms(self.channel, prompt_len * act_tok, act_tok, n_decode)
+        out = interior_net_ms(self.channel, prompt_len * act_tok, act_tok, n_decode)
+        if self.expert_offload:
+            k = self.cfg.moe.num_experts_per_tok
+            per_block = roundtrip_ms(
+                self.channel, prompt_len * k * act_tok, prompt_len * act_tok
+            ) + n_decode * roundtrip_ms(self.channel, k * act_tok, act_tok)
+            out = dict(out)
+            out["expert_ms"] = len(self.expert_offload) * per_block
+            out["total_ms"] += out["expert_ms"]
+        return out
+
+    def record_chunk_bytes(self, prompt_len: int, n_decode: int) -> None:
+        """Fold one robot-chunk's modeled channel bytes into the metrics.
+
+        Per-leg ``channel.bytes_up`` / ``channel.bytes_down`` counters:
+        the cut-activation leg ships every token's boundary activation up
+        and the sampled token id back down; each offloaded MoE block adds
+        an expert-gather leg (top-k hidden states up) and an expert-scatter
+        leg (the mixture output down) over prompt + decode tokens.  No-op
+        without an attached Observability handle.
+        """
+
+        if self.obs is None:
+            return
+        m = self.obs.metrics
+        act_tok = self.cfg.d_model * 2.0
+        tokens = prompt_len + n_decode
+        m.counter("channel.bytes_up", leg="cut-activation").inc(
+            int(tokens * act_tok)
+        )
+        m.counter("channel.bytes_down", leg="cut-activation").inc(
+            int(n_decode * TOKEN_ID_BYTES)
+        )
+        if self.expert_offload:
+            k = self.cfg.moe.num_experts_per_tok
+            n_blocks = len(self.expert_offload)
+            m.counter("channel.bytes_up", leg="expert-gather").inc(
+                int(n_blocks * tokens * k * act_tok)
+            )
+            m.counter("channel.bytes_down", leg="expert-scatter").inc(
+                int(n_blocks * tokens * act_tok)
+            )
 
 
 class PartitionedPolicy:
@@ -678,4 +913,5 @@ class PartitionedPolicy:
         self.net_ms_log.append(
             self.executor.modeled_net_ms(obs.shape[1], self._n_steps)["total_ms"]
         )
+        self.executor.record_chunk_bytes(obs.shape[1], self._n_steps)
         return self.tok.decode_action(toks).reshape(-1, self.chunk_len, self.n_joints)

@@ -50,6 +50,16 @@ class BlockNode:
     flops_decode: float         # executed FLOPs per decode token
     hbm_bytes_decode: float     # cache/state traffic per decode step
     cut_act_bytes: float        # activation bytes/token if cut after this node
+    # 2-D planning: the expert sub-block of an MoE layer, separable from
+    # the attention + router part.  ``expert_param_bytes`` is ALL experts'
+    # residency (E x per-expert FFN), ``expert_exec_bytes`` the top-k slice
+    # actually touched per token; both zero on non-MoE nodes.  Offloading a
+    # layer's experts moves ``expert_param_bytes`` off the edge budget and
+    # ``expert_exec_bytes`` into the cloud's executed bytes, at the price of
+    # a gather/scatter channel leg per decode token.
+    expert_param_bytes: float = 0.0
+    expert_exec_bytes: float = 0.0
+    moe_top_k: int = 0
 
 
 @dataclass(frozen=True)
@@ -61,6 +71,15 @@ class InferenceGraph:
     d_model: int
     tie_embeddings: bool
     embed_bytes: float          # table bytes (tied-embedding duplication)
+    # vision/audio-encoder-as-a-stage: the modality frontend's bytes, kept
+    # INSIDE the stem node's totals above but recorded separately so the
+    # 2-D planner can place the encoder independently of the cut.  With the
+    # encoder edge-side at cut 0, the uplink ships ``encoder_out_bytes``
+    # (the encoded modality tokens) instead of the channel's raw
+    # ``obs_bytes``; all three fields are zero on text-only configs.
+    encoder_param_bytes: float = 0.0
+    encoder_exec_bytes: float = 0.0
+    encoder_out_bytes: float = 0.0
 
     @property
     def n_cuts(self) -> int:
@@ -117,15 +136,24 @@ def build_graph(
     stem_param = emb_bytes
     stem_exec = kv_len * d * BYTES_PER_PARAM  # rows looked up, not the table
     stem_flops_prefill = 0.0
+    enc_param = enc_exec = enc_out = 0.0
     if cfg.modality != "text" and not cfg.encoder_decoder:
         stem_param += d * d * BYTES_PER_PARAM
         stem_exec += d * d * BYTES_PER_PARAM
         stem_flops_prefill += 2.0 * cfg.num_modality_tokens * d * d
+        # the modality projector IS the placeable encoder stage: its output
+        # is num_modality_tokens bf16 activation rows
+        enc_param = enc_exec = d * d * BYTES_PER_PARAM
+        enc_out = cfg.num_modality_tokens * d * BYTES_PER_PARAM
     if cfg.encoder_decoder:
         enc_bytes = cfg.encoder_param_counts() * BYTES_PER_PARAM
         stem_param += enc_bytes
         stem_exec += enc_bytes
         stem_flops_prefill += encoder_flops(cfg, 1, prompt_len)
+        # enc-dec: the whole encoder stack is the stage; its output is the
+        # encoded prompt (prompt_len rows of d_model)
+        enc_param = enc_exec = enc_bytes
+        enc_out = prompt_len * d * BYTES_PER_PARAM
     nodes.append(
         BlockNode(
             index=0,
@@ -144,6 +172,15 @@ def build_graph(
     # --- transformer layers ------------------------------------------------
     for i, spec in enumerate(layer_specs(cfg)):
         counts = cfg.block_param_counts(i)
+        exp_param = exp_exec = 0.0
+        top_k = 0
+        if spec[1] and cfg.d_ff > 0 and cfg.moe is not None:
+            # the separable expert sub-block: per-expert FFN weights only
+            # (the d*E router stays with the attention part on the edge)
+            per_exp = (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+            exp_param = cfg.moe.num_experts * per_exp * BYTES_PER_PARAM
+            exp_exec = cfg.moe.num_experts_per_tok * per_exp * BYTES_PER_PARAM
+            top_k = cfg.moe.num_experts_per_tok
         nodes.append(
             BlockNode(
                 index=i + 1,
@@ -156,6 +193,9 @@ def build_graph(
                 flops_decode=block_flops(cfg, spec, 1, 1, decode=True, kv_len=kv_len),
                 hbm_bytes_decode=block_decode_bytes(cfg, spec, 1, kv_len),
                 cut_act_bytes=act_tok,
+                expert_param_bytes=exp_param,
+                expert_exec_bytes=exp_exec,
+                moe_top_k=top_k,
             )
         )
 
@@ -186,4 +226,7 @@ def build_graph(
         d_model=d,
         tie_embeddings=cfg.tie_embeddings,
         embed_bytes=emb_bytes,
+        encoder_param_bytes=enc_param,
+        encoder_exec_bytes=enc_exec,
+        encoder_out_bytes=enc_out,
     )

@@ -37,7 +37,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.partition.graph import InferenceGraph, build_graph
-from repro.runtime.channel import ChannelConfig, query_latency_ms, ship_ms
+from repro.runtime.channel import (
+    ChannelConfig,
+    query_latency_ms,
+    roundtrip_ms,
+    ship_ms,
+)
 from repro.runtime.latency import HardwareModel, arch_hardware_model
 
 # the simulated RAPID kinematic trigger's offload rate on the episode suite
@@ -127,6 +132,15 @@ class CutEval:
     stale_ms: float = 0.0    # expected corrective-refetch cost per chunk
     sim_fraction: Optional[float] = None  # simulated cloudward fraction
     # (planned offloads + staleness refetches) under THIS cut's profile
+    # --- 2-D plan coordinates (``enumerate_cuts_2d``) ---------------------
+    # ``placement``: "" = the plain 1-D cut; "experts_cloud" = the listed
+    # edge layers' experts live cloud-side behind gather/scatter legs;
+    # "monitor" = the edge prefix is a redundancy-monitor substrate only and
+    # the cloud holds a full replica; "encoder_edge" = the modality encoder
+    # runs edge-side at cut 0 and its output (not raw pixels) crosses up.
+    placement: str = ""
+    expert_offload: Tuple[int, ...] = ()   # model layer indices, ascending
+    net_expert_ms: float = 0.0             # gather/scatter legs per chunk
 
 
 @dataclass(frozen=True)
@@ -157,18 +171,37 @@ class PartitionPlan:
     per_cut_fraction: bool = False  # per-cut staleness pricing used
     stale_ms: float = 0.0
     sim_fraction: Optional[float] = None
+    # 2-D plan coordinates (``plan_partition(plan_2d=True)``); defaulted so
+    # every existing 1-D construction site keeps working unchanged
+    plan_2d: bool = False
+    placement: str = ""
+    expert_offload: Tuple[int, ...] = ()
+    net_expert_ms: float = 0.0
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
 
     @classmethod
     def from_json(cls, s: str) -> "PartitionPlan":
-        return cls(**json.loads(s))
+        d = json.loads(s)
+        # JSON has no tuple: restore the dataclass-default type so a
+        # round-tripped plan compares equal to the original
+        d["expert_offload"] = tuple(d.get("expert_offload", ()))
+        return cls(**d)
 
     def summary(self) -> str:
+        extra = ""
+        if self.placement == "experts_cloud":
+            extra = (
+                f" experts_cloud={len(self.expert_offload)} layer(s) "
+                f"(+{self.net_expert_ms:.1f}ms legs)"
+            )
+        elif self.placement:
+            extra = f" placement={self.placement}"
         return (
             f"{self.arch}: {self.mode} cut={self.cut}/{self.n_nodes} "
-            f"({self.cut_layer} layers on edge) edge={self.edge_gb:.2f}GB "
+            f"({self.cut_layer} layers on edge){extra} "
+            f"edge={self.edge_gb:.2f}GB "
             f"cloud={self.cloud_gb:.2f}GB f_off={self.offload_fraction:.2f} "
             f"-> {self.total_ms:.1f}ms "
             f"(edge {self.edge_ms:.1f} + net {self.net_ms:.1f} "
@@ -299,6 +332,231 @@ def enumerate_cuts(
     return evals
 
 
+def enumerate_cuts_2d(
+    graph: InferenceGraph,
+    hw: HardwareModel,
+    channel: Optional[ChannelConfig] = None,
+    *,
+    offload_fraction: float = DEFAULT_OFFLOAD_FRACTION,
+    edge_mem_gb: float = DEFAULT_EDGE_MEM_GB,
+    cloud_mem_gb: float = float("inf"),
+    pipelined: bool = False,
+    per_cut_fraction: bool = False,
+    stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
+    executable_only: bool = False,
+) -> List[CutEval]:
+    """Score the 2-D plan space: (cut layer x placement).
+
+    The option set at every cut INCLUDES the plain 1-D point (``placement
+    == ""``), so the 2-D minimum is never worse than the 1-D minimum by
+    construction — 1-D cuts are a strict subset of this space.  Three
+    placement families extend it:
+
+      * **experts_cloud** — for an interior (or edge-only) cut whose edge
+        prefix contains MoE blocks, the trailing ``j`` MoE blocks' experts
+        live cloud-side: their resident bytes leave the edge budget, and
+        every decode token pays a gather/scatter round trip per offloaded
+        block (top-k hidden states up on the uplink, the expert-mixture
+        output back on the downlink).  The edge prefix is the monitor
+        substrate and runs every chunk, so the legs — and the cloud's
+        expert FFN time — are charged at fraction 1, not ``f``; this is the
+        honest price of keeping router+attention edge-side when the experts
+        don't fit (the jamba regime: 19 GB of experts per MoE block against
+        an 8 GB edge).
+      * **monitor** — the edge prefix is kept purely as the redundancy
+        monitor's substrate while the cloud holds a FULL replica
+        (resident-vs-executed asymmetry applied at the system level: cloud
+        residency is cheap, edge residency is not).  Offloaded chunks are
+        single-leg full-stack cloud queries (prompt cut-activations up,
+        action token ids down) instead of the per-token ping-pong — which
+        is what frees the big MoE archs from ``cloud_only`` on WAN.  A
+        monitor-only prefix contributes nothing to offloaded computation,
+        so its staleness cost is INTRINSIC and always charged (even under
+        global-fraction pricing): ``(1-f) * miss(depth) * refetch``.
+      * **encoder_edge** — at cut 0, the modality encoder (vision
+        projector / audio encoder stack) runs edge-side and its OUTPUT
+        crosses the uplink instead of the raw observation payload; wins
+        exactly when the encoded tokens are smaller than the compressed
+        observation (seamless: 28 KB vs 80 KB) and is priced either way.
+
+    ``executable_only`` restricts the space to the placements the split
+    executor realizes today — plain cuts and ``experts_cloud`` lanes
+    (monitor-resident prefixes and encoder staging are priced-only
+    deployments); the restricted minimum is still never worse than 1-D.
+    """
+
+    channel = channel or hw.channel
+    n = len(graph.nodes)
+    n_layers = max(n - 2, 1)
+    scale = hw.full_model_gb / (graph.total_param_bytes / 1e9)
+    res = [nd.param_bytes * scale / 1e9 for nd in graph.nodes]
+    exe = [nd.exec_bytes * scale / 1e9 for nd in graph.nodes]
+    exp_res = [nd.expert_param_bytes * scale / 1e9 for nd in graph.nodes]
+    exp_exe = [nd.expert_exec_bytes * scale / 1e9 for nd in graph.nodes]
+    total_exec = sum(exe)
+    full_refetch_ms = query_latency_ms(channel, hw.chunk_len) + hw.cloud_time_ms(
+        total_exec
+    )
+
+    # the 1-D points, bit-identical to the 1-D planner's own evals
+    evals = enumerate_cuts(
+        graph, hw, channel,
+        offload_fraction=offload_fraction,
+        edge_mem_gb=edge_mem_gb,
+        cloud_mem_gb=cloud_mem_gb,
+        pipelined=pipelined,
+        per_cut_fraction=per_cut_fraction,
+        stale_miss_rate=stale_miss_rate,
+    )
+    base = {e.cut: e for e in evals}
+    out = list(evals)
+    f = offload_fraction
+
+    def _stale(cut: int, f_eff: float, always: bool = False):
+        """(stale_ms, sim_fraction) for a prefix of node-cut ``cut``."""
+
+        if not (per_cut_fraction or always):
+            return 0.0, None
+        depth = graph.cut_layers(cut) / n_layers if cut > 0 else 0.0
+        miss = stale_miss_rate * (1.0 - depth)
+        return (
+            (1.0 - f_eff) * miss * full_refetch_ms,
+            min(1.0, f_eff + (1.0 - f_eff) * miss),
+        )
+
+    # --- experts_cloud: trailing expert offload at every deeper cut -------
+    for cut in range(1, n + 1):
+        edge_moe = [
+            i for i in range(cut) if graph.nodes[i].is_moe and exp_res[i] > 0
+        ]
+        b = base[cut]
+        for j in range(1, len(edge_moe) + 1):
+            off = edge_moe[-j:]  # the j deepest edge MoE blocks
+            moved_res = sum(exp_res[i] for i in off)
+            moved_exe = sum(exp_exe[i] for i in off)
+            edge_gb = b.edge_gb - moved_res
+            cloud_gb = b.cloud_gb + moved_res
+            edge_exec = b.edge_exec_gb - moved_exe
+            cloud_exec = b.cloud_exec_gb + moved_exe
+            act = graph.nodes[0].cut_act_bytes  # d_model bf16 everywhere
+            # gather/scatter legs, per offloaded block: top-k hidden states
+            # up, the mixed expert output down — prefill ships the whole
+            # prompt's worth, decode one token's worth per step; charged
+            # every chunk (the edge monitor pass needs the expert outputs)
+            net_exp = 0.0
+            for i in off:
+                k = graph.nodes[i].moe_top_k
+                net_exp += roundtrip_ms(
+                    channel, graph.prompt_len * k * act, graph.prompt_len * act
+                )
+                net_exp += graph.chunk_tokens * roundtrip_ms(
+                    channel, k * act, act
+                )
+            exp_cloud_ms = hw.cloud_time_ms(moved_exe)
+            edge_ms = edge_exec * hw.rate_edge_ms_per_gb
+            if cut == n:
+                # edge-only body, experts cloudward: no suffix to offload to
+                f_eff = 0.0
+                cloud_gb = moved_res
+                cloud_exec = moved_exe
+                total = edge_ms + net_exp + exp_cloud_ms
+                cloud_ms = exp_cloud_ms
+                net_cut = 0.0
+            else:
+                f_eff = f
+                cloud_ms = hw.cloud_time_ms(cloud_exec)
+                net_cut = b.net_ms
+                if pipelined:
+                    total = (1.0 - f_eff) * (edge_ms + exp_cloud_ms + net_exp) + (
+                        f_eff * (max(edge_ms, cloud_ms) + net_cut + net_exp)
+                    )
+                else:
+                    total = (
+                        edge_ms
+                        + net_exp
+                        + (1.0 - f_eff) * exp_cloud_ms
+                        + f_eff * (net_cut + cloud_ms)
+                    )
+            stale_ms, sim_fraction = _stale(cut, f_eff)
+            total += stale_ms
+            feasible = (
+                edge_gb <= edge_mem_gb + 1e-9 and cloud_gb <= cloud_mem_gb + 1e-9
+            )
+            out.append(CutEval(
+                cut=cut, feasible=feasible,
+                edge_gb=edge_gb, cloud_gb=cloud_gb,
+                edge_exec_gb=edge_exec, cloud_exec_gb=cloud_exec,
+                offload_fraction=f_eff,
+                edge_ms=edge_ms, cloud_ms=cloud_ms,
+                net_ms=net_cut, total_ms=total,
+                stale_ms=stale_ms, sim_fraction=sim_fraction,
+                placement="experts_cloud",
+                expert_offload=tuple(
+                    graph.nodes[i].layer for i in off
+                ),
+                net_expert_ms=net_exp,
+            ))
+
+    # --- monitor: prefix as redundancy substrate, full replica cloud ------
+    for cut in range(1, n) if not executable_only else ():
+        b = base[cut]
+        edge_gb = sum(res[:cut])
+        cloud_gb = sum(res)  # full replica; tied table already counted once
+        edge_exec = sum(exe[:cut])
+        edge_ms = edge_exec * hw.rate_edge_ms_per_gb
+        cloud_ms = hw.cloud_time_ms(total_exec)
+        act = graph.nodes[cut - 1].cut_act_bytes
+        net = roundtrip_ms(
+            channel,
+            graph.prompt_len * act,
+            graph.chunk_tokens * TOKEN_ID_BYTES,
+        )
+        stale_ms, sim_fraction = _stale(cut, f, always=True)
+        total = edge_ms + f * (net + cloud_ms) + stale_ms
+        feasible = (
+            edge_gb <= edge_mem_gb + 1e-9 and cloud_gb <= cloud_mem_gb + 1e-9
+        )
+        out.append(CutEval(
+            cut=cut, feasible=feasible,
+            edge_gb=edge_gb, cloud_gb=cloud_gb,
+            edge_exec_gb=edge_exec, cloud_exec_gb=total_exec,
+            offload_fraction=f,
+            edge_ms=edge_ms, cloud_ms=cloud_ms,
+            net_ms=net, total_ms=total,
+            stale_ms=stale_ms, sim_fraction=sim_fraction,
+            placement="monitor",
+        ))
+
+    # --- encoder_edge: the modality encoder as its own stage at cut 0 -----
+    if graph.encoder_out_bytes > 0 and not executable_only:
+        enc_res = graph.encoder_param_bytes * scale / 1e9
+        enc_exe = graph.encoder_exec_bytes * scale / 1e9
+        edge_ms = enc_exe * hw.rate_edge_ms_per_gb
+        cloud_exec = total_exec - enc_exe
+        cloud_ms = hw.cloud_time_ms(cloud_exec)
+        net = roundtrip_ms(
+            channel,
+            graph.encoder_out_bytes,
+            hw.chunk_len * channel.per_action_bytes,
+        )
+        total = edge_ms + net + cloud_ms  # f = 1: no LM prefix, no replay
+        feasible = (
+            enc_res <= edge_mem_gb + 1e-9
+            and sum(res) - enc_res <= cloud_mem_gb + 1e-9
+        )
+        out.append(CutEval(
+            cut=0, feasible=feasible,
+            edge_gb=enc_res, cloud_gb=sum(res) - enc_res,
+            edge_exec_gb=enc_exe, cloud_exec_gb=cloud_exec,
+            offload_fraction=1.0,
+            edge_ms=edge_ms, cloud_ms=cloud_ms,
+            net_ms=net, total_ms=total,
+            placement="encoder_edge",
+        ))
+
+    return out
+
+
 def evaluate_cut(
     cfg: ModelConfig,
     cut: int,
@@ -355,6 +613,8 @@ def plan_partition(
     pipelined: bool = False,
     per_cut_fraction: bool = False,
     stale_miss_rate: float = DEFAULT_STALE_MISS_RATE,
+    plan_2d: bool = False,
+    executable_only: bool = False,
 ) -> PartitionPlan:
     """Choose the compatibility-optimal cut for ``cfg``.
 
@@ -365,6 +625,13 @@ def plan_partition(
     ``per_cut_fraction=True`` grows ``offload_fraction`` into a per-cut
     simulated fraction under each cut's own staleness profile — shallow
     edge prefixes are charged corrective refetches on the replayed share.
+    ``plan_2d=True`` plans over (cut layer x placement) via
+    ``enumerate_cuts_2d`` — expert offload, monitor-resident prefixes, and
+    encoder-stage placement; never worse than the 1-D plan because every
+    1-D cut is in the 2-D option set.  ``executable_only`` (2-D only)
+    restricts the placements to what the split executor can serve today
+    (plain cuts + expert-offload lanes) — what ``plan_fleet_partition``
+    realizes on a live fleet.
     """
 
     if graph is None:
@@ -376,7 +643,9 @@ def plan_partition(
         hw = arch_hardware_model(int(graph.total_param_bytes))
     channel = channel or hw.channel
 
-    evals = enumerate_cuts(
+    kw2d = {"executable_only": executable_only} if plan_2d else {}
+    enum = enumerate_cuts_2d if plan_2d else enumerate_cuts
+    evals = enum(
         graph, hw, channel,
         offload_fraction=offload_fraction,
         edge_mem_gb=edge_mem_gb,
@@ -384,6 +653,7 @@ def plan_partition(
         pipelined=pipelined,
         per_cut_fraction=per_cut_fraction,
         stale_miss_rate=stale_miss_rate,
+        **kw2d,
     )
     feasible = [e for e in evals if e.feasible]
     if not feasible:
@@ -393,11 +663,19 @@ def plan_partition(
         )
     best = min(feasible, key=lambda e: e.total_ms)
     n = len(graph.nodes)
-    edge_only = evals[n]
-    cloud_only = evals[0]
-    mode = "cloud_only" if best.cut == 0 else (
-        "edge_only" if best.cut == n else "split"
-    )
+    # the single-device references are always the plain 1-D boundary points
+    edge_only = next(e for e in evals if e.cut == n and not e.placement)
+    cloud_only = next(e for e in evals if e.cut == 0 and not e.placement)
+    if best.placement == "experts_cloud":
+        mode = "expert_split"
+    elif best.placement == "monitor":
+        mode = "monitor_split"
+    elif best.placement == "encoder_edge":
+        mode = "encoder_split"
+    else:
+        mode = "cloud_only" if best.cut == 0 else (
+            "edge_only" if best.cut == n else "split"
+        )
     return PartitionPlan(
         arch=cfg.name,
         cut=best.cut,
@@ -423,6 +701,10 @@ def plan_partition(
         per_cut_fraction=per_cut_fraction,
         stale_ms=best.stale_ms,
         sim_fraction=best.sim_fraction,
+        plan_2d=plan_2d,
+        placement=best.placement,
+        expert_offload=tuple(best.expert_offload),
+        net_expert_ms=best.net_expert_ms,
     )
 
 

@@ -35,6 +35,22 @@ def query_latency_ms(cfg: ChannelConfig, chunk_len: int) -> float:
     return cfg.rtt_ms + up + down
 
 
+def roundtrip_ms(cfg: ChannelConfig, up_bytes: float, down_bytes: float) -> float:
+    """One asymmetric-payload round-trip: RTT + up-leg + down-leg serialization.
+
+    The 2-D planner's channel primitive — expert gather/scatter ships the
+    top-k hidden state up (``k * d_model`` bf16) and the expert-mixture
+    output down (``d_model`` bf16), so the two legs price over the two
+    directions' own bandwidths.
+    """
+
+    return (
+        cfg.rtt_ms
+        + ship_ms(up_bytes, cfg.uplink_mbps)
+        + ship_ms(down_bytes, cfg.downlink_mbps)
+    )
+
+
 def sample_latency_ms(cfg: ChannelConfig, chunk_len: int, key) -> float:
     """One stochastic offload round-trip: mean plus exponential jitter.
 

@@ -94,6 +94,13 @@ def _bucket(n: int) -> int:
     return b
 
 
+def _lane_order(key) -> Tuple[int, tuple]:
+    """Total order over lane keys: plain int cuts sort with ``(cut,
+    offload)`` expert-offload keys at the same boundary (plain first)."""
+
+    return (key, ()) if isinstance(key, int) else (key[0], tuple(key[1]))
+
+
 @dataclass
 class ChunkRequest:
     robot_id: int
@@ -130,6 +137,7 @@ class ChunkResult:
     kind: str = "cloud"      # "cloud" (full stack) | "split" (cloud suffix)
     pool: Optional[PoolStats] = None
     cut: Optional[int] = None  # split kind: the lane's edge layer count
+    expert_offload: Tuple[int, ...] = ()  # the lane's cloud-resident experts
     # request-lifecycle wall stamps (obs.clock seconds; 0 when obs is off).
     # ``completed_ts`` is the harvesting boundary's single clock read, so
     # results of one window share it exactly.
@@ -167,8 +175,8 @@ class _ScanWindow:
     n_steps: int                         # total tokens decoded per row
     toks: Optional[jax.Array] = None     # cloud tokens [rows, n_steps]
     seqs: List[_Sequence] = field(default_factory=list)
-    lane_toks: Dict[int, object] = field(default_factory=dict)
-    lane_seqs: Dict[int, list] = field(default_factory=dict)
+    lane_toks: Dict[object, object] = field(default_factory=dict)  # by lane key
+    lane_seqs: Dict[object, list] = field(default_factory=dict)
     t_open: float = 0.0                  # obs.clock at dispatch
 
 
@@ -285,9 +293,11 @@ class ContinuousBatchingScheduler:
         self._queue: Deque[ChunkRequest] = deque()
         self._seqs: Dict[int, _Sequence] = {}    # row -> sequence
         self._free_rows: List[int] = list(range(rows0))
-        # cut-keyed split-lane registry: one lane per DISTINCT active cut,
-        # all drawing pages from the one allocator above
-        self._lanes: Dict[int, "_SplitLane"] = {}
+        # lane-key-keyed split-lane registry: plain layer cuts key by their
+        # int cut (backwards compatible), expert-offload lanes by
+        # ``(cut, offload)`` — so a plain lane and an offload lane may share
+        # a cut boundary, all drawing pages from the one allocator above
+        self._lanes: Dict[object, "_SplitLane"] = {}
         self._order = 0
         self._window: Optional[_ScanWindow] = None
 
@@ -343,26 +353,35 @@ class ContinuousBatchingScheduler:
         reference the pipelined path is tested bit-identical against).
         Heterogeneous pipelined lanes must share parameter slices — derive
         siblings with ``executor.with_cut``.
+
+        Expert-offload executors (``executor.expert_offload`` non-empty)
+        register under their ``(cut, offload)`` lane key, so an offload
+        lane coexists with a plain lane at the same cut; both join the
+        same fused decode windows and page pool.
         """
 
-        cut = executor.cut_layer
-        if cut in self._lanes:
-            raise ValueError(f"cut {cut} already has a lane attached")
+        key = getattr(executor, "lane_key", executor.cut_layer)
+        if key in self._lanes:
+            raise ValueError(f"lane {key} already attached")
         if self.obs is not None and getattr(executor, "obs", None) is None:
             executor.obs = self.obs  # lane spans share the run's registry
-        self._lanes[cut] = _SplitLane(self, executor, rows, pipelined)
+        self._lanes[key] = _SplitLane(self, executor, rows, pipelined)
 
-    def _lane_for(self, cut: Optional[int]) -> "_SplitLane":
+    def _lane_for(self, cut) -> "_SplitLane":
         if not self._lanes:
             raise ValueError("no PartitionExecutor attached; call attach_partition")
         if cut is None:
             if len(self._lanes) > 1:
                 raise ValueError(
-                    f"multiple cuts attached {sorted(self._lanes)}; pass cut="
+                    "multiple lanes attached "
+                    f"{sorted(self._lanes, key=_lane_order)}; pass cut="
                 )
             return next(iter(self._lanes.values()))
         if cut not in self._lanes:
-            raise ValueError(f"no lane for cut {cut}; attached: {sorted(self._lanes)}")
+            raise ValueError(
+                f"no lane for {cut}; attached: "
+                f"{sorted(self._lanes, key=_lane_order)}"
+            )
         return self._lanes[cut]
 
     def submit(
@@ -441,7 +460,7 @@ class ContinuousBatchingScheduler:
             for seq in lane.seqs.values():
                 if seq.robot_id == robot_id and not seq.dead:
                     dead = w is not None and any(
-                        s is seq for s in w.lane_seqs.get(lane.cut, ())
+                        s is seq for s in w.lane_seqs.get(lane.key, ())
                     )
                     if dead:
                         seq.dead = True
@@ -470,9 +489,11 @@ class ContinuousBatchingScheduler:
         each row matches the serial encode bit-for-bit.
 
         ``partitioned`` is an optional [n] bool mask, ``cuts`` an optional
-        [n] int array (entries < 0 mean "no cut given" — legal only while a
-        single lane is attached), ``defer_rounds`` an optional [n] int
-        array.  Obs stamping uses one ``clock()`` read for the whole batch;
+        [n] sequence of lane keys: plain int cuts (entries < 0 or ``None``
+        mean "no cut given" — legal only while a single lane is attached)
+        or ``(cut, expert_offload)`` tuples routing to expert-offload
+        lanes.  ``defer_rounds`` is an optional [n] int array.  Obs
+        stamping uses one ``clock()`` read for the whole batch;
         serial submits read it per request (the stamps feed wait
         histograms, not the decode path, so results stay byte-identical).
         """
@@ -493,7 +514,9 @@ class ContinuousBatchingScheduler:
             np.zeros(n, np.int64) if defer_rounds is None
             else np.asarray(defer_rounds, np.int64)
         )
-        cut_arr = None if cuts is None else np.asarray(cuts, np.int64)
+        # lane keys may mix ints and (cut, offload) tuples, so keep them as
+        # a plain list instead of forcing an int64 array
+        cut_seq = None if cuts is None else list(cuts)
         ts = 0.0
         if self.obs is not None:
             ts = clock()
@@ -514,8 +537,12 @@ class ContinuousBatchingScheduler:
                 self.deferred += 1
             if part[i]:
                 cut = None
-                if cut_arr is not None and cut_arr[i] >= 0:
-                    cut = int(cut_arr[i])
+                if cut_seq is not None:
+                    c = cut_seq[i]
+                    if isinstance(c, tuple):
+                        cut = (int(c[0]), tuple(int(x) for x in c[1]))
+                    elif c is not None and int(c) >= 0:
+                        cut = int(c)
                 self._lane_for(cut).queue.append(req)
             else:
                 self._queue.append(req)
@@ -544,9 +571,22 @@ class ContinuousBatchingScheduler:
 
     @property
     def active_cuts(self) -> List[int]:
-        """Distinct cuts with in-flight suffixes this instant (ascending)."""
+        """Distinct cuts with in-flight suffixes this instant (ascending).
 
-        return sorted(c for c, l in self._lanes.items() if l.seqs)
+        Lane keys collapse to their cut layer here: a plain lane and an
+        expert-offload lane at the same boundary count as one cut (they
+        batch into the same suffix rows); ``active_lanes`` keeps them apart.
+        """
+
+        return sorted({l.cut for l in self._lanes.values() if l.seqs})
+
+    @property
+    def active_lanes(self) -> List[object]:
+        """Lane keys with in-flight suffixes this instant (ascending)."""
+
+        return sorted(
+            (k for k, l in self._lanes.items() if l.seqs), key=_lane_order
+        )
 
     def pool_stats(self) -> PoolStats:
         a = self.allocator
@@ -753,13 +793,17 @@ class ContinuousBatchingScheduler:
         per-lane tokens/logits stay on device until ``harvest``.
         """
 
-        lanes = sorted(lanes, key=lambda l: l.cut)
+        lanes = sorted(lanes, key=lambda l: _lane_order(l.key))
         ex = lanes[0].ex
         cuts = tuple(l.cut for l in lanes)
-        key = (cuts, n_steps)
+        offloads = tuple(l.expert_offload for l in lanes)
+        key = (cuts, offloads, n_steps)
         fn = self._fleet_fns.get(key)
         if fn is None:
-            fn = ex.build_fleet_decode(cuts, n_steps, self._token_floor)
+            fn = ex.build_fleet_decode(
+                cuts, n_steps, self._token_floor,
+                offloads=offloads if any(offloads) else None,
+            )
             self._fleet_fns[key] = fn
         # only the layers the fused call returns may be donated — an entry
         # for a shallower (currently idle) cut must stay alive
@@ -818,22 +862,23 @@ class ContinuousBatchingScheduler:
             # cancelled pending sequence's recycled pages are never touched
             self._merge_pending()
         new: List[_Sequence] = []
-        new_split: Dict[int, list] = {}
+        new_split: Dict[object, list] = {}
         while self.allocator.num_free >= self.pages_per_req:
             heads = []
             if self._queue and self._queue[0].earliest_round <= self.round:
                 heads.append((self._queue[0].order, None))
-            for cut, lane in self._lanes.items():
+            for key, lane in self._lanes.items():
                 if lane.queue and lane.queue[0].earliest_round <= self.round:
-                    heads.append((lane.queue[0].order, cut))
+                    heads.append((lane.queue[0].order, key))
             if not heads:
                 break
-            _, cut = min(heads)
-            if cut is None:
+            # orders are globally unique, so min() never compares lane keys
+            _, key = min(heads, key=lambda h: h[0])
+            if key is None:
                 new.append(self._reserve(self._queue.popleft()))
             else:
-                lane = self._lanes[cut]
-                new_split.setdefault(cut, []).append(
+                lane = self._lanes[key]
+                new_split.setdefault(key, []).append(
                     lane.reserve(lane.queue.popleft())
                 )
         if self.obs is not None and (new or new_split):
@@ -847,8 +892,8 @@ class ContinuousBatchingScheduler:
             for seq in admitted:
                 seq.admit_ts = t_adm
                 qw.observe((t_adm - seq.request.submit_ts) * 1e3)
-        for cut, seqs in new_split.items():
-            self._lanes[cut].flush(seqs)
+        for key, seqs in new_split.items():
+            self._lanes[key].flush(seqs)
         if not new:
             return
         if self._prefill_device is not None:
@@ -1050,8 +1095,9 @@ class ContinuousBatchingScheduler:
             if w.toks is not None:
                 tr.complete("lane cloud", name, w.t_open, t_end,
                             {"rows": len(w.seqs), "rounds": self.scan_rounds})
-            for cut, seqs in w.lane_seqs.items():
-                tr.complete(f"lane cut={cut}", name, w.t_open, t_end,
+            for key, seqs in w.lane_seqs.items():
+                tr.complete(f"lane {self._lanes[key].label}", name, w.t_open,
+                            t_end,
                             {"rows": len(seqs), "rounds": self.scan_rounds})
         self._obs_complete(done, t_end)
         alloc = self.allocator
@@ -1137,8 +1183,8 @@ class ContinuousBatchingScheduler:
         if planes:
             self._split_fused_step(planes, rounds * block)
             for lane in planes:
-                w.lane_seqs[lane.cut] = list(lane.seqs.values())
-                w.lane_toks[lane.cut] = lane._pending_toks
+                w.lane_seqs[lane.key] = list(lane.seqs.values())
+                w.lane_toks[lane.key] = lane._pending_toks
                 lane._pending_toks = None
         self._window = w
         self._window.steps_left -= 1
@@ -1183,8 +1229,8 @@ class ContinuousBatchingScheduler:
             for seq in w.seqs:
                 if seq.dead and self._seqs.get(seq.row) is seq:
                     self._release(seq)
-        for cut, seqs in w.lane_seqs.items():
-            done.extend(self._lanes[cut].harvest(seqs, w.lane_toks[cut], self.round))
+        for key, seqs in w.lane_seqs.items():
+            done.extend(self._lanes[key].harvest(seqs, w.lane_toks[key], self.round))
         if self.obs is not None:
             self._obs_window_close(w, done)
         return done
@@ -1253,6 +1299,8 @@ class _SplitLane:
         self.sched = sched
         self.ex = executor
         self.cut = executor.cut_layer
+        self.expert_offload = getattr(executor, "expert_offload", ())
+        self.key = getattr(executor, "lane_key", executor.cut_layer)
         self.rows = rows
         self.pipelined = pipelined
         self.queue: Deque[ChunkRequest] = deque()
@@ -1268,6 +1316,12 @@ class _SplitLane:
         self._pt = self._len = self._cap = self._logits = None
         self._pending_logits = None   # device logits of an in-flight window
         self._pending_toks = None
+
+    @property
+    def label(self) -> str:
+        off = ("+exp" + ",".join(map(str, self.expert_offload))
+               if self.expert_offload else "")
+        return f"cut={self.cut}{off}"
 
     @property
     def has_buffers(self) -> bool:
@@ -1352,6 +1406,8 @@ class _SplitLane:
         sched = self.sched
         pages = sched.allocator.alloc(sched.pages_per_req)
         row = self._take_row()
+        # one robot-chunk's modeled channel bytes (per-leg up/down counters)
+        self.ex.record_chunk_bytes(sched.prompt_len, sched.total_tokens)
         # edge prefix runs on the robot's own device: batch-1 prefill
         x_cut, edge_cache = self.ex.edge_prefill(req.obs[None])
         seq = _SplitSeq(
@@ -1477,6 +1533,7 @@ class _SplitLane:
                         kind="split",
                         pool=sched.pool_stats(),
                         cut=self.cut,
+                        expert_offload=self.expert_offload,
                         submitted_ts=seq.request.submit_ts,
                         admitted_ts=seq.admit_ts,
                     ))
@@ -1513,6 +1570,7 @@ class _SplitLane:
                     kind="split",
                     pool=sched.pool_stats(),
                     cut=self.cut,
+                    expert_offload=self.expert_offload,
                     submitted_ts=seq.request.submit_ts,
                     admitted_ts=seq.admit_ts,
                 ))

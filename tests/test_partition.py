@@ -157,7 +157,7 @@ def test_bench_partition_rows(tmp_path):
 
     path = tmp_path / "BENCH_partition.json"
     rows, n_split = bench_rows(offload_fraction=0.31, out_path=str(path))
-    assert len(rows) == 2 * len(ARCH_IDS)  # planner row + hetero-fleet row
+    assert len(rows) == 3 * len(ARCH_IDS)  # planner + 2-D + hetero-fleet rows
     assert n_split > 0, "no architecture/profile ever benefits from a split"
     import json
 
@@ -172,6 +172,17 @@ def test_bench_partition_rows(tmp_path):
             cell[k] for k in ("edge_only_ms", "cloud_only_ms") if cell[k] is not None
         ]
         assert cell["total_ms"] <= min(anchors) + 1e-6, key
+        # 2-D rows: never worse than 1-D, executable restriction between
+        assert cell["plan2d_total_ms"] <= cell["total_ms"] + 1e-6, key
+        assert cell["plan2d_exec_total_ms"] <= cell["total_ms"] + 1e-6, key
+        assert cell["plan2d_total_ms"] <= cell["plan2d_exec_total_ms"] + 1e-6, key
+    # >= 1 MoE arch moves off cloud_only on wan AND congested (phi3.5-moe)
+    assert data["plan2d_moved_cells"] >= 2
+    for profile in ("wan", "congested"):
+        cell = data[f"phi3.5-moe-42b-a6.6b|{profile}"]
+        assert cell["mode"] == "cloud_only", profile
+        assert cell["plan2d_moved_off_cloud_only"], profile
+        assert cell["plan2d_total_ms"] < cell["total_ms"] - 1e-6, profile
     # heterogeneous fleet rows: per-robot cuts never lose to the best
     # single global cut at the same telemetry, and at least one cell runs
     # a genuine >= 2-cut frontier
